@@ -1,0 +1,58 @@
+"""Shared benchmark helpers: paper-scale models, clusters, reporting."""
+
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (Cluster, Device, make_pi_cluster, plan,  # noqa: E402
+                        partition_graph, simulate, stage_cost)
+from repro.core.partition import Piece, chain_pieces  # noqa: E402
+from repro.models.cnn import zoo  # noqa: E402
+
+
+def paper_models():
+    return {
+        "vgg16": zoo.vgg16(input_size=(224, 224)),
+        "yolov2": zoo.yolov2(input_size=(448, 448)),
+    }
+
+
+def paper_cluster(n: int, freq: float = 1.0) -> Cluster:
+    """n Raspberry-Pis at `freq` GHz, 50 Mbps WLAN (paper testbed)."""
+    return make_pi_cluster([freq] * n)
+
+
+def hetero_cluster() -> Cluster:
+    """Paper §6.1: 2x Nvidia TX2 NX @2.2 + Pis at 1.5/1.2/0.8 GHz."""
+    c = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 0.8, 0.8])
+    nx = [Device(f"NX{i}@2.2GHz", capacity=2.2e9 * 2, active_power=10.0,
+                 idle_power=2.5) for i in range(2)]
+    return Cluster(nx + c.devices, bandwidth=c.bandwidth)
+
+
+def single_device_latency(model, cluster) -> float:
+    single = Cluster([max(cluster.devices, key=lambda d: d.capacity)],
+                     bandwidth=cluster.bandwidth)
+    full = model.graph.forward_sizes(model.input_size)
+    sc = stage_cost(model.graph, frozenset(model.graph.layers), full,
+                    model.input_size, single.devices, single)
+    return sc.total
+
+
+def csv_row(name: str, us_per_call: float, derived) -> str:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    print(row, flush=True)
+    return row
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

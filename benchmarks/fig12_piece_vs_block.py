@@ -1,0 +1,75 @@
+"""Paper Fig. 12: speedup of graph-partitioned pieces vs block-as-layer
+for ResNet34 and InceptionV3 across CPU frequencies and 2-8 devices."""
+
+from __future__ import annotations
+
+from .common import csv_row, paper_cluster, single_device_latency
+from repro.core import baselines as B
+from repro.core import partition_graph
+from repro.core.partition import Piece, block_pieces
+from repro.models.cnn import zoo
+
+
+def _block_pieces(m):
+    """Treat every block (and the glue between blocks) as a piece —
+    the strategy of [6]/[17] the paper compares against."""
+    g = m.graph
+    in_block = {n for b in m.blocks for n in b}
+    pieces = []
+    cur: list[str] = []
+    blocks_sorted = []
+    seen = set()
+    for n in g.topo_order:
+        b = next((bl for bl in m.blocks if n in bl and id(bl) not in seen),
+                 None)
+        if b is not None:
+            if cur:
+                pieces.append(frozenset(cur))
+                cur = []
+            pieces.append(frozenset(b))
+            seen.add(id(b))
+        elif n not in in_block:
+            cur.append(n)
+    if cur:
+        pieces.append(frozenset(cur))
+    return [Piece(p, 0.0, i) for i, p in enumerate(pieces)]
+
+
+def run() -> list[str]:
+    rows = []
+    cases = [("resnet34", zoo.resnet34(input_size=(224, 224))),
+             ("inceptionv3", zoo.inceptionv3(input_size=(299, 299)))]
+    for name, m in cases:
+        fine = partition_graph(m.graph, m.input_size, n_split=8).pieces \
+            if name != "inceptionv3" else \
+            partition_graph(m.graph, m.input_size, n_split=8).pieces
+        if m.blocks:
+            coarse = _block_pieces(m)
+        else:
+            # inception blocks are concat-delimited: cut at every concat
+            cuts, cur = [], []
+            for n in m.graph.topo_order:
+                cur.append(n)
+                if m.graph.layers[n].kind == "concat":
+                    cuts.append(frozenset(cur))
+                    cur = []
+            if cur:
+                cuts.append(frozenset(cur))
+            coarse = [Piece(p, 0.0, i) for i, p in enumerate(cuts)]
+        for freq in (0.6, 1.0, 1.5):
+            for n_dev in (2, 4, 6, 8):
+                cluster = paper_cluster(n_dev, freq)
+                single = single_device_latency(m, cluster)
+                for tag, pieces in (("block", coarse), ("piece", fine)):
+                    res = B.pico_scheme(m.graph, pieces, cluster,
+                                        m.input_size)
+                    rows.append(csv_row(
+                        f"fig12/{name}_{tag}_f{freq}_d{n_dev}",
+                        res.period * 1e6,
+                        f"speedup={single/res.period:.2f};"
+                        f"pieces={len(pieces)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Figs. 13-14: cluster capacity executing VGG16 / YOLOv2 under
+LW / EFL / OFL / CE / PICO with 2-8 devices and several CPU frequencies.
+
+Reports the pipeline period (s) and throughput (tasks/min), plus the
+speedup over one device — the paper's headline 1.8-6.8x range.
+"""
+
+from __future__ import annotations
+
+from .common import csv_row, paper_cluster, single_device_latency
+from repro.core import baselines as B
+from repro.core import partition_graph, plan
+from repro.models.cnn import zoo
+
+FREQS = (0.6, 1.0, 1.5)
+DEVICES = (2, 4, 6, 8)
+
+
+def run(models=("vgg16", "yolov2")) -> list[str]:
+    rows = []
+    builders = {"vgg16": lambda: zoo.vgg16(input_size=(224, 224)),
+                "yolov2": lambda: zoo.yolov2(input_size=(448, 448))}
+    for name in models:
+        m = builders[name]()
+        part = partition_graph(m.graph, m.input_size, n_split=8)
+        for freq in FREQS:
+            for n_dev in DEVICES:
+                cluster = paper_cluster(n_dev, freq)
+                single = single_device_latency(m, cluster)
+                results = {
+                    "LW": B.layer_wise(m.graph, cluster, m.input_size),
+                    "EFL": B.early_fused(m.graph, cluster, m.input_size),
+                    "OFL": B.optimal_fused(m.graph, cluster, m.input_size,
+                                           part.pieces),
+                    "CE": B.coedge(m.graph, cluster, m.input_size),
+                    "PICO": B.pico_scheme(m.graph, part.pieces, cluster,
+                                          m.input_size),
+                }
+                for sname, res in results.items():
+                    rows.append(csv_row(
+                        f"fig13/{name}_{sname}_f{freq}_d{n_dev}",
+                        res.period * 1e6,
+                        f"throughput_per_min={60/res.period:.2f};"
+                        f"speedup={single/res.period:.2f};"
+                        f"latency_s={res.latency:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

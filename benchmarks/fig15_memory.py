@@ -1,0 +1,49 @@
+"""Paper Fig. 15 (+ Fig. 16): memory footprint and energy vs #devices.
+
+LW/EFL/OFL replicate the whole model on every device; PICO distributes
+both model and features — average per-device memory drops with devices.
+Energy comes from the simulator's active/idle power model.
+"""
+
+from __future__ import annotations
+
+from .common import csv_row, paper_cluster
+from repro.core import baselines as B
+from repro.core import partition_graph, simulate
+from repro.models.cnn import zoo
+
+
+def run() -> list[str]:
+    rows = []
+    m = zoo.vgg16(input_size=(224, 224))
+    part = partition_graph(m.graph, m.input_size, n_split=8)
+    for n_dev in (2, 4, 6, 8):
+        cluster = paper_cluster(n_dev, 1.0)
+        schemes = {
+            "LW": B.layer_wise(m.graph, cluster, m.input_size),
+            "EFL": B.early_fused(m.graph, cluster, m.input_size),
+            "OFL": B.optimal_fused(m.graph, cluster, m.input_size,
+                                   part.pieces),
+            "PICO": B.pico_scheme(m.graph, part.pieces, cluster,
+                                  m.input_size),
+        }
+        for sname, res in schemes.items():
+            if sname == "PICO":
+                rep = simulate(res.extra["plan"], frames=32)
+                mem = rep.avg_memory
+                energy = rep.total_energy_j / rep.frames
+            else:
+                mem = (sum(res.memory_bytes.values())
+                       / max(len(res.memory_bytes), 1))
+                # all devices busy-or-idle for the whole period
+                busy = sum(res.per_device_busy.values())
+                idle = res.period * n_dev - busy
+                energy = busy * 5.0 + idle * 1.6
+            rows.append(csv_row(
+                f"fig15/vgg16_{sname}_d{n_dev}", res.period * 1e6,
+                f"avg_mem_mb={mem/1e6:.1f};energy_j_per_frame={energy:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

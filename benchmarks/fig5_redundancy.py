@@ -1,0 +1,39 @@
+"""Paper Fig. 5: FLOPs vs number of fused layers and devices (VGG16).
+
+(a) per-device FLOPs; (b) total FLOPs of all devices.  Shows the
+fused-layer scheme's redundancy explosion that motivates pipelining.
+"""
+
+from __future__ import annotations
+
+from .common import csv_row
+from repro.core.cost import segment_cost
+from repro.models.cnn import zoo
+
+
+def run() -> list[str]:
+    m = zoo.vgg16(input_size=(224, 224))
+    g = m.graph
+    full = g.forward_sizes(m.input_size)
+    order = [n for n in g.topo_order
+             if g.layers[n].kind in ("conv", "pool")]
+    rows = []
+    for n_fused in (1, 2, 4, 6, 8, 10, 13):
+        nodes = frozenset(order[:n_fused])
+        exact = g.segment_flops(
+            nodes, {n: full[n] for n in nodes})
+        for n_dev in (1, 2, 4, 6, 8):
+            seg = segment_cost(g, nodes, full, m.input_size,
+                               [1.0 / n_dev] * n_dev)
+            per_dev = max(seg.per_device_flops)
+            total = sum(seg.per_device_flops)
+            rows.append(csv_row(
+                f"fig5/fused{n_fused}_dev{n_dev}", 0.0,
+                f"per_device_gflops={per_dev/1e9:.2f};"
+                f"total_gflops={total/1e9:.2f};"
+                f"redundancy={max(0.0, total/exact - 1):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Run every paper-artifact benchmark.  Prints ``name,us_per_call,derived``
+CSV rows (one per measurement), mirroring the paper's tables/figures:
+
+  table4   Algorithm 1 runtime/pieces per CNN         (paper Table 4)
+  fig5     FLOPs vs fused layers x devices            (paper Fig. 5)
+  fig12    piece- vs block-granularity speedup        (paper Fig. 12)
+  fig13    throughput: LW/EFL/OFL/CE/PICO             (paper Figs. 13-14)
+  table5   heterogeneous utilization/redundancy/mem   (paper Table 5)
+  fig15    memory + energy vs devices                 (paper Figs. 15-16)
+  table67  PICO vs BFS-optimal                        (paper Tables 6-7)
+
+Use --fast to trim the slowest sweeps (full mode is the default for
+``python -m benchmarks.run``).
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
+                   fig13_throughput, table5_hetero, fig15_memory,
+                   table67_optimal)
+    benches = {
+        "table4": lambda: table4_partition.run(),
+        "fig5": lambda: fig5_redundancy.run(),
+        "fig13": lambda: fig13_throughput.run(
+            models=("vgg16",) if args.fast else ("vgg16", "yolov2")),
+        "fig12": lambda: fig12_piece_vs_block.run(),
+        "table5": lambda: table5_hetero.run(),
+        "fig15": lambda: fig15_memory.run(),
+        "table67": lambda: table67_optimal.run(fast=args.fast),
+    }
+    only = args.only.split(",") if args.only else list(benches)
+    t0 = time.time()
+    n = 0
+    print("name,us_per_call,derived")
+    for name in only:
+        rows = benches[name]()
+        n += len(rows)
+    print(f"# {n} rows in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

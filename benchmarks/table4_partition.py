@@ -1,0 +1,48 @@
+"""Paper Table 4: Algorithm 1 performance on various CNNs.
+
+Columns: model, n (conv/pool vertices), width w, theoretical bound
+w*d*(n*d/w)^w, execution time, #pieces.  NASNet runs via the
+divide-and-conquer strategy (paper §6.2.3, 'NASNetL-P').
+"""
+
+from __future__ import annotations
+
+from .common import csv_row, Timer
+from repro.core import partition_graph, partition_graph_dnc
+from repro.models.cnn import zoo
+
+D = 5  # diameter bound (paper §4.3)
+
+CASES = [
+    ("vgg16", dict(input_size=(224, 224)), False),
+    ("squeezenet", dict(input_size=(224, 224)), False),
+    ("resnet34", dict(input_size=(224, 224)), False),
+    ("mobilenetv3", dict(input_size=(224, 224)), False),
+    ("inceptionv3", dict(input_size=(299, 299)), False),
+    ("nasnet", dict(n_cells=8, input_size=(224, 224), width=6), True),
+]
+
+
+def run() -> list[str]:
+    rows = []
+    for name, kw, use_dnc in CASES:
+        m = zoo.build(name, **kw)
+        g = m.graph
+        n, w = len(g.layers), g.width()
+        bound = w * D * (n * D / max(w, 1)) ** w
+        with Timer() as t:
+            if use_dnc:
+                res = partition_graph_dnc(g, m.input_size, n_split=4,
+                                          max_diameter=D, chunk=24)
+            else:
+                res = partition_graph(g, m.input_size, n_split=4,
+                                      max_diameter=D)
+        rows.append(csv_row(
+            f"table4/{name}", t.s * 1e6,
+            f"n={n};w={w};bound={bound:.2g};pieces={len(res.pieces)};"
+            f"states={res.states_explored};dnc={use_dnc}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

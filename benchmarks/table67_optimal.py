@@ -1,0 +1,88 @@
+"""Paper Tables 6-7 + Figs. 17-18: PICO vs exhaustive BFS optimum.
+
+Table 6: graph-structured CNN x homogeneous devices.
+Table 7: chain CNN x heterogeneous devices.
+Reports optimization wall time for both and the period ratio
+(PICO period / BFS period) where BFS finished within budget.
+"""
+
+from __future__ import annotations
+
+from .common import csv_row, paper_cluster, Timer
+from repro.core import (Cluster, make_pi_cluster, partition_graph)
+from repro.core import baselines as B
+from repro.core.partition import Piece, chain_pieces
+from repro.models.cnn import zoo
+from repro.models.cnn.builder import GB
+
+BFS_BUDGET_S = 60.0
+
+
+def synthetic_graph_cnn(branches: int, layers: int):
+    """Paper Table 6 graphs: `branches` parallel paths, `layers` convs."""
+    b = GB(f"g{branches}x{layers}", (64, 64))
+    stem = b.conv(None, 16, 3, p=1)
+    per = max(1, (layers - 2) // branches)
+    outs = []
+    for br in range(branches):
+        x = stem
+        for i in range(per):
+            x = b.conv(x, 16, 3, p=1)
+        outs.append(x)
+    x = b.concat(outs) if len(outs) > 1 else outs[0]
+    x = b.conv(x, 16, 1)
+    return b.done()
+
+
+def synthetic_chain_cnn(layers: int):
+    b = GB(f"chain{layers}", (64, 64))
+    x = None
+    for i in range(layers):
+        x = b.conv(x, 16, 3, p=1)
+    return b.done()
+
+
+def run(fast: bool = True) -> list[str]:
+    rows = []
+    # --- Table 6: graph CNN, homogeneous devices
+    cases6 = [(2, 8, 4), (3, 12, 4)] + ([] if fast else [(3, 12, 6)])
+    for br, ly, nd in cases6:
+        m = synthetic_graph_cnn(br, ly)
+        cluster = paper_cluster(nd, 1.0)
+        with Timer() as tp:
+            part = partition_graph(m.graph, m.input_size, n_split=nd)
+            pico = B.pico_scheme(m.graph, part.pieces, cluster,
+                                 m.input_size)
+        bfs = B.bfs_optimal(m.graph, part.pieces, cluster, m.input_size,
+                            budget_s=BFS_BUDGET_S)
+        ratio = pico.period / bfs.period if bfs.extra["complete"] else None
+        rows.append(csv_row(
+            f"table6/branches{br}_layers{ly}_dev{nd}", tp.s * 1e6,
+            f"pico_s={tp.s:.3f};bfs_s={bfs.wall_time_s:.3f};"
+            f"bfs_complete={bfs.extra['complete']};"
+            f"configs={bfs.extra.get('configs_evaluated')};"
+            f"period_ratio={ratio if ratio is None else round(ratio,3)}"))
+    # --- Table 7: chain CNN, heterogeneous devices
+    cases7 = [(4, 4), (8, 4)] + ([] if fast else [(12, 4), (8, 6)])
+    for ly, nd in cases7:
+        m = synthetic_chain_cnn(ly)
+        freqs = [1.5, 1.2, 1.0, 0.8, 0.7, 0.6][:nd]
+        cluster = make_pi_cluster(freqs)
+        pieces = [Piece(ns, 0.0, i)
+                  for i, ns in enumerate(chain_pieces(m.graph))]
+        with Timer() as tp:
+            pico = B.pico_scheme(m.graph, pieces, cluster, m.input_size)
+        bfs = B.bfs_optimal(m.graph, pieces, cluster, m.input_size,
+                            budget_s=BFS_BUDGET_S)
+        ratio = pico.period / bfs.period if bfs.extra["complete"] else None
+        rows.append(csv_row(
+            f"table7/layers{ly}_dev{nd}", tp.s * 1e6,
+            f"pico_s={tp.s:.3f};bfs_s={bfs.wall_time_s:.3f};"
+            f"bfs_complete={bfs.extra['complete']};"
+            f"configs={bfs.extra.get('configs_evaluated')};"
+            f"period_ratio={ratio if ratio is None else round(ratio,3)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,27 @@
+"""Serve a small LM with batched requests: prefill + KV-cache decode
+across the assigned-architecture families (dense / MoE / SSM / hybrid).
+
+    PYTHONPATH=src python examples/lm_generate.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.transformer import model as M
+from repro.serving.lm import generate
+
+for name in ("llama3.2-1b", "mixtral-8x7b", "mamba2-370m", "zamba2-2.7b"):
+    cfg = configs.get(name).reduced(n_layers=2, d_model=128)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    toks = generate(cfg, params, prompt, n_new=16)
+    dt = time.time() - t0
+    assert toks.shape == (4, 16)
+    print(f"{name:22s} ({cfg.family:6s}) generated {toks.shape} in "
+          f"{dt:.1f}s; sample: {toks[0, :8].tolist()}")
+print("batched prefill+decode serving works across families ✓")

@@ -1,0 +1,78 @@
+"""The four assigned input shapes + ShapeDtypeStruct input builders.
+
+Decode shapes lower ``serve_step`` (ONE new token against a seq_len KV
+cache), not ``train_step``.  ``long_500k`` requires sub-quadratic
+decode: SSM/hybrid run natively, Mixtral uses its native sliding window,
+and pure full-attention archs run an explicit sliding-window variant
+(``ArchConfig.with_sliding_window``) — see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer.config import ArchConfig
+from ..models.transformer.model import init_cache
+
+LONG_CONTEXT_WINDOW = 8192   # SWA window used by dense archs on long_500k
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def arch_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Swap in the sliding-window variant for quadratic archs on 500k."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train   -> {'tokens'|'embeds', 'labels'}
+    prefill -> {'tokens'|'embeds'}
+    decode  -> {'inputs': {'token'|'embed'}, 'cache': pytree}
+    """
+    cfg = arch_for_shape(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    def token_batch(with_labels: bool):
+        if cfg.input_mode == "tokens":
+            b = {"tokens": sds((B, S), jnp.int32)}
+        else:
+            b = {"embeds": sds((B, S, cfg.d_model), dtype)}
+        if with_labels:
+            b["labels"] = sds((B, S), jnp.int32)
+        return b
+
+    if shape.kind == "train":
+        return token_batch(True)
+    if shape.kind == "prefill":
+        return token_batch(False)
+    # decode
+    if cfg.input_mode == "tokens":
+        inputs = {"token": sds((B,), jnp.int32)}
+    else:
+        inputs = {"embed": sds((B, cfg.d_model), dtype)}
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, dtype=dtype))
+    return {"inputs": inputs, "cache": cache}

@@ -1,0 +1,58 @@
+"""Algorithm 3 — adapt a homogeneous-optimal pipeline to real devices.
+
+Greedy: sort devices by capacity (desc); repeatedly give the next device
+to the stage with the highest remaining per-slot average compute demand
+Θ'/|D'|.  When a stage's slots fill up, rebalance its output-tile widths
+proportionally to the assigned devices' capacities (the paper's
+divide-and-conquer feature re-partition).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Sequence
+
+from .cost import Cluster, Device, stage_cost
+from .pipeline_dp import PipelinePlan, StagePlan
+
+
+def adjust_stages(
+    plan: PipelinePlan,
+    cluster: Cluster,
+    g,
+    input_size: tuple[int, int],
+) -> PipelinePlan:
+    """Algorithm 3.  ``plan`` comes from PipelineDP on cluster.homogenized()."""
+    t0 = time.perf_counter()
+    full = g.forward_sizes(input_size)
+
+    # remaining slots + per-slot demand for every homogeneous stage
+    slots = [st.n_devices for st in plan.stages]
+    demand = [sum(st.cost.seg.per_device_flops) / max(st.n_devices, 1)
+              for st in plan.stages]
+    assigned: list[list[Device]] = [[] for _ in plan.stages]
+
+    for dev in cluster.sorted_by_capacity():
+        # stage with max remaining average demand (paper text §5.1.2)
+        cand = [k for k in range(len(plan.stages)) if slots[k] > 0]
+        if not cand:
+            break
+        k = max(cand, key=lambda q: demand[q])
+        assigned[k].append(dev)
+        slots[k] -= 1
+
+    stages: list[StagePlan] = []
+    period = 0.0
+    latency = 0.0
+    for st, devs in zip(plan.stages, assigned):
+        devs = devs or list(st.devices)  # safety: keep placeholder devices
+        total = sum(d.capacity for d in devs)
+        fracs = [d.capacity / total for d in devs]
+        sc = stage_cost(g, st.nodes, full, input_size, devs, cluster, fracs)
+        stages.append(StagePlan(st.first_piece, st.last_piece, devs,
+                                st.nodes, sc, fracs))
+        period = max(period, sc.total)
+        latency += sc.total
+    return PipelinePlan(stages, period, latency,
+                        plan.wall_time_s + (time.perf_counter() - t0))

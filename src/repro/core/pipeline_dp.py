@@ -1,0 +1,170 @@
+"""Algorithm 2 — many-to-many mapping of pieces x devices to pipeline stages.
+
+DP of Eq. 15 over states (i, j, p): the optimal pipeline for pieces
+i..j with p homogeneous devices is either a single stage, or an optimal
+sub-pipeline over i..s with p-m devices followed by one stage s+1..j
+replicated over m devices:
+
+    P[i][j][p] = min_{i<=s<j} min_{1<=m<p} max(P[i][s][p-m], Ts[s+1][j][m])
+
+Latency (sum of stage times) is tracked alongside and solutions whose
+latency exceeds ``T_lim`` are pruned, matching the paper's pseudocode.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Mapping, Sequence
+
+from .graph import Graph
+from .cost import Cluster, Device, StageCost, stage_cost
+from .partition import Piece
+
+
+@dataclass
+class StagePlan:
+    """One pipeline stage: pieces [i..j] on ``devices``."""
+
+    first_piece: int
+    last_piece: int
+    devices: list[Device]
+    nodes: frozenset[str]
+    cost: StageCost
+    fractions: list[float] = field(default_factory=list)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+
+@dataclass
+class PipelinePlan:
+    stages: list[StagePlan]
+    period: float               # P(G, D, S)  (Eq. 12)
+    latency: float              # T(G, D, S)
+    wall_time_s: float = 0.0
+    feasible: bool = True       # False: no config satisfied T_lim;
+                                # the returned plan is the unconstrained
+                                # optimum (best effort)
+
+    @property
+    def throughput(self) -> float:
+        return 1.0 / self.period if self.period > 0 else float("inf")
+
+    def __iter__(self):
+        return iter(self.stages)
+
+
+class PipelineDP:
+    """Eq. 15 solver for a *homogeneous* cluster (use hetero.adjust after)."""
+
+    def __init__(
+        self,
+        g: Graph,
+        pieces: Sequence[Piece],
+        cluster: Cluster,
+        input_size: tuple[int, int],
+        t_lim: float = float("inf"),
+    ):
+        self.g = g
+        self.pieces = list(pieces)
+        self.cluster = cluster
+        self.input_size = input_size
+        self.t_lim = t_lim
+        self.full = g.forward_sizes(input_size)
+        self._stage_cache: dict[tuple[int, int, int], StageCost] = {}
+        # memo[(i, j, p)] = (period, latency, split) where split is either
+        # None (single stage) or (s, m)
+        self.memo: dict[tuple[int, int, int], tuple[float, float, object]] = {}
+
+    # -- Ts(i, j, m): one stage over pieces i..j with m devices ---------
+    def stage(self, i: int, j: int, m: int) -> StageCost:
+        key = (i, j, m)
+        hit = self._stage_cache.get(key)
+        if hit is None:
+            nodes = frozenset().union(*(p.nodes for p in self.pieces[i:j + 1]))
+            devs = self.cluster.devices[:m]
+            hit = stage_cost(self.g, nodes, self.full, self.input_size,
+                             devs, self.cluster, [1.0 / m] * m)
+            self._stage_cache[key] = hit
+        return hit
+
+    def solve(self, i: int, j: int, p: int) -> tuple[float, float]:
+        """Returns (period, latency) for pieces i..j with p devices."""
+        key = (i, j, p)
+        if key in self.memo:
+            per, lat, _ = self.memo[key]
+            return per, lat
+        # option A: a single stage with all p devices (feasible only if
+        # its latency fits the budget; infinite period marks infeasible)
+        sc = self.stage(i, j, p)
+        if sc.total <= self.t_lim:
+            best = (sc.total, sc.total, None)
+        else:
+            best = (float("inf"), sc.total, None)
+        if p > 1 and j > i:
+            for s in range(i, j):
+                for m in range(1, p):
+                    tail = self.stage(s + 1, j, m).total
+                    if tail > best[0]:
+                        # period = max(head, tail) >= tail: cannot improve
+                        continue
+                    head_p, head_l = self.solve(i, s, p - m)
+                    lat = head_l + tail
+                    if lat > self.t_lim:
+                        continue
+                    per = max(head_p, tail)
+                    if per < best[0] or (per == best[0] and lat < best[1]):
+                        best = (per, lat, (s, m))
+        self.memo[key] = best
+        return best[0], best[1]
+
+    def build(self) -> PipelinePlan:
+        t0 = time.perf_counter()
+        L, D = len(self.pieces), len(self.cluster)
+        per, lat = self.solve(0, L - 1, D)
+        if per == float("inf"):
+            # T_lim infeasible: fall back to the unconstrained optimum
+            # and flag it (paper: the limit is a soft preference)
+            fallback = PipelineDP(self.g, self.pieces, self.cluster,
+                                  self.input_size).build()
+            fallback.feasible = False
+            fallback.wall_time_s += time.perf_counter() - t0
+            return fallback
+        stages: list[StagePlan] = []
+
+        def walk(i: int, j: int, p: int):
+            _, _, split = self.memo[(i, j, p)]
+            if split is None:
+                sc = self.stage(i, j, p)
+                nodes = frozenset().union(*(x.nodes for x in self.pieces[i:j + 1]))
+                stages.append(StagePlan(i, j, list(self.cluster.devices[:p]),
+                                        nodes, sc, [1.0 / p] * p))
+            else:
+                s, m = split
+                walk(i, s, p - m)
+                sc = self.stage(s + 1, j, m)
+                nodes = frozenset().union(*(x.nodes for x in self.pieces[s + 1:j + 1]))
+                stages.append(StagePlan(s + 1, j, list(self.cluster.devices[:m]),
+                                        nodes, sc, [1.0 / m] * m))
+
+        walk(0, L - 1, D)
+        # assign *distinct* device slices to stages (the DP only cares
+        # about counts; Algorithm 3 re-maps real heterogeneous devices)
+        off = 0
+        for st in stages:
+            st.devices = list(self.cluster.devices[off:off + st.n_devices])
+            off += st.n_devices
+        return PipelinePlan(stages, per, lat, time.perf_counter() - t0)
+
+
+def plan_pipeline(
+    g: Graph,
+    pieces: Sequence[Piece],
+    cluster: Cluster,
+    input_size: tuple[int, int],
+    t_lim: float = float("inf"),
+) -> PipelinePlan:
+    return PipelineDP(g, pieces, cluster, input_size, t_lim).build()

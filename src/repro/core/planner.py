@@ -1,0 +1,70 @@
+"""PICO facade: model graph + cluster -> executable PipelinePlan.
+
+The two-step optimization of the paper:
+  1. Algorithm 1: orchestrate the DAG into a chain of pieces.
+  2. Algorithm 2 on the homogenized cluster (Eq. 14), then Algorithm 3
+     to adapt to the true heterogeneous devices.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from .graph import Graph
+from .cost import Cluster
+from .partition import (Piece, PartitionResult, partition_graph,
+                        partition_graph_dnc)
+from .pipeline_dp import PipelineDP, PipelinePlan
+from .hetero import adjust_stages
+
+
+@dataclass
+class PicoPlan:
+    partition: PartitionResult
+    pipeline: PipelinePlan
+
+    @property
+    def period(self) -> float:
+        return self.pipeline.period
+
+    @property
+    def latency(self) -> float:
+        return self.pipeline.latency
+
+    @property
+    def throughput(self) -> float:
+        return self.pipeline.throughput
+
+
+def plan(
+    g: Graph,
+    cluster: Cluster,
+    input_size: tuple[int, int],
+    t_lim: float = float("inf"),
+    max_diameter: int = 5,
+    n_split: int | None = None,
+    dnc_threshold: int = 120,
+    pieces: Sequence[Piece] | None = None,
+) -> PicoPlan:
+    """Run the full PICO optimization.
+
+    ``n_split`` (reference tiling for C(M)) defaults to the cluster size.
+    Graphs wider/longer than ``dnc_threshold`` vertices use the
+    divide-and-conquer driver.
+    """
+    n_split = n_split or max(2, len(cluster))
+    if pieces is None:
+        if len(g.layers) > dnc_threshold:
+            part = partition_graph_dnc(g, input_size, n_split, max_diameter)
+        else:
+            part = partition_graph(g, input_size, n_split, max_diameter)
+    else:
+        part = PartitionResult(list(pieces), max(p.redundancy for p in pieces),
+                               0, 0.0)
+
+    homo = cluster.homogenized()
+    dp = PipelineDP(g, part.pieces, homo, input_size, t_lim)
+    homo_plan = dp.build()
+    final = adjust_stages(homo_plan, cluster, g, input_size)
+    return PicoPlan(part, final)

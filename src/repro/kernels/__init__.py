@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper with fallback) and ref.py (pure-jnp oracle).  Kernels are
+validated on CPU in interpret mode; pure-JAX paths are used on the CPU
+dry-run (Pallas lowers for TPU targets only).
+"""

@@ -1,0 +1,105 @@
+"""Pallas TPU flash-decode attention kernel (GQA, masked KV length).
+
+One new query token per sequence attends to a (possibly partially
+filled) KV cache.  Grid: (batch, kv_head, kv_blocks); the kv-block axis
+is innermost so the online-softmax state (m, l, acc) lives in VMEM
+scratch across its sequential iterations — the classic flash-decoding
+structure, restated for the TPU's sequential grid instead of CUDA
+thread-block splits (DESIGN.md §3).
+
+The valid cache length arrives via scalar prefetch so block masking is
+computed on-core.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, ts: int, n_s: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                    # (G, D)
+    k = k_ref[0, :, 0, :]              # (TS, D)
+    v = v_ref[0, :, 0, :]              # (TS, D)
+    valid_len = len_ref[0]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    pos = s * ts + jax.lax.broadcasted_iota(jnp.int32, (ts,), 0)
+    mask = pos < valid_len             # (TS,)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[None, :], scores, -1e30)   # (G, TS)
+
+    m_prev = m_ref[...]                # (G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], scores.max(axis=-1))[:, None]
+    p = jnp.exp(scores - m_new)        # (G, TS)
+    corr = jnp.exp(m_prev - m_new)     # (G, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _pick_ts(S: int, pref: int = 512) -> int:
+    if S % pref == 0:
+        return pref
+    for t in (256, 128, 64, 32, 16, 8):
+        if S % t == 0:
+            return t
+    return S
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array, *, interpret: bool = False
+                     ) -> jax.Array:
+    """q: (B, K, G, D); k/v: (B, S, K, D); valid_len: () int32.
+
+    Returns (B, K, G, D) — softmax(q k^T / sqrt(D)) v over the first
+    ``valid_len`` cache entries.
+    """
+    B, K, G, D = q.shape
+    S = k.shape[1]
+    ts = _pick_ts(S)
+    n_s = S // ts
+    kernel = functools.partial(_decode_attn_kernel, ts=ts, n_s=n_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, ts, 1, D), lambda b, h, s, lens: (b, s, h, 0)),
+            pl.BlockSpec((1, ts, 1, D), lambda b, h, s, lens: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, s, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    lens = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(lens, q, k, v)

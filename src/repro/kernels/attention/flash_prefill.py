@@ -1,0 +1,121 @@
+"""Pallas TPU flash-attention prefill kernel (causal, GQA).
+
+This is the on-TPU answer to the §Perf finding that blockwise attention
+in plain XLA materializes every f32 score/prob block to HBM (the
+dominant memory-roofline term for prefill_32k): here the (qb x kb)
+score tile lives entirely in VMEM scratch; HBM sees only q/k/v/o tiles.
+
+Grid: (batch*kv_head, q_blocks, kv_blocks), kv innermost so the online
+softmax state (m, l, acc) persists in VMEM scratch across the kv sweep.
+Causality is enforced per-tile; fully-masked tiles still iterate (TPU
+grids are static) but skip the matmuls via @pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  qb: int, kb: int, n_kb: int, sliding_window: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile is live iff some (q, k) pair inside is causal-visible
+    live = (qi + 1) * qb - 1 >= kj * kb
+    if sliding_window:
+        live &= qi * qb - ((kj + 1) * kb - 1) < sliding_window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]                   # (qb, G, D)
+        k = k_ref[0]                   # (kb, D)
+        v = v_ref[0]                   # (kb, D)
+        G, D = q.shape[1], q.shape[2]
+        scale = 1.0 / math.sqrt(D)
+        qf = q.reshape(qb * G, D)
+        s = jnp.dot(qf, k.T, preferred_element_type=jnp.float32) * scale
+        s = s.reshape(qb, G, kb)
+        q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, 1, kb), 0)
+        k_pos = kj * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, 1, kb), 2)
+        mask = q_pos >= k_pos
+        if sliding_window:
+            mask &= (q_pos - k_pos) < sliding_window
+        s = jnp.where(mask, s, -1e30)
+
+        m_prev = m_ref[...]            # (qb, G)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        pv = jnp.dot(p.reshape(qb * G, kb).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None].reshape(
+            qb * G, 1) + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30).reshape(-1, 1)
+        o_ref[0] = (acc_ref[...] / l).reshape(o_ref.shape[1:]) \
+            .astype(o_ref.dtype)
+
+
+def _pick(s: int, pref: int) -> int:
+    if s % pref == 0:
+        return pref
+    for t in (256, 128, 64, 32, 16, 8):
+        if s % t == 0:
+            return t
+    return s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sliding_window", "interpret"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  sliding_window: int = 0, interpret: bool = False
+                  ) -> jax.Array:
+    """Causal GQA attention.  q: (B, S, K, G, D); k/v: (B, S, K, D).
+
+    Returns (B, S, K, G, D).
+    """
+    B, S, K, G, D = q.shape
+    qb = _pick(S, 512)
+    kb = _pick(S, 512)
+    n_qb, n_kb = S // qb, S // kb
+    # fold (B, K) into one grid axis via reshape
+    qr = q.transpose(0, 2, 1, 3, 4).reshape(B * K, S, G, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    kernel = functools.partial(_flash_kernel, qb=qb, kb=kb, n_kb=n_kb,
+                               sliding_window=sliding_window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * K, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, qb, G, D), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, kb, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, G, D), lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, S, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, G), jnp.float32),
+            pltpu.VMEM((qb, G), jnp.float32),
+            pltpu.VMEM((qb * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, K, S, G, D).transpose(0, 2, 1, 3, 4)

@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the flash-decode attention kernel."""
+
+import jax
+
+from .decode_attn import decode_attention as _decode_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len, *, use_pallas: bool = True,
+                     interpret: bool = False) -> jax.Array:
+    if not use_pallas:
+        return decode_attention_ref(q, k, v, valid_len)
+    return _decode_pallas(q, k, v, valid_len, interpret=interpret)

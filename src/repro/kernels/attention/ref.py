@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash-decode attention."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """q: (B, K, G, D); k/v: (B, S, K, D)."""
+    S = k.shape[1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q, k) / math.sqrt(q.shape[-1])
+    mask = jnp.arange(S) < valid_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgs,bskd->bkgd", w, v)

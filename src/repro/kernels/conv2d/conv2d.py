@@ -1,0 +1,88 @@
+"""Pallas TPU conv2d kernel (implicit GEMM) — the paper's compute hot spot.
+
+TPU adaptation (DESIGN.md §3): instead of porting a CUDA im2col conv, the
+kernel decomposes the convolution into KH*KW shifted matmuls feeding the
+MXU, with BlockSpec tiling over (batch, out-channel, in-channel) and an
+fp32 VMEM accumulator.  The in-channel grid axis is innermost so the
+accumulator lives across its iterations (sequential grid on TPU).
+
+Layout: NHWC x HWIO -> NHWC, stride 1, VALID (the executable zoo's tiled
+stages present exactly this: padding is materialized by the stage
+boundary).  Channel tiles are MXU-aligned (128) whenever the channel
+counts allow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int,
+                   n_ci_blocks: int):
+    ci = pl.program_id(3)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]          # (H_in, W_in, TCI)
+    w = w_ref[...]        # (KH, KW, TCI, TCO)
+    H_out = o_ref.shape[1]
+    W_out = o_ref.shape[2]
+    acc = acc_ref[...]
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = x[dh:dh + H_out, dw:dw + W_out, :]       # (H,W,TCI)
+            lhs = patch.reshape(H_out * W_out, patch.shape[-1])
+            rhs = w[dh, dw]                                   # (TCI, TCO)
+            acc += jnp.dot(lhs, rhs,
+                           preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ci == n_ci_blocks - 1)
+    def _emit():
+        o_ref[0] = acc.reshape(H_out, W_out, -1).astype(o_ref.dtype)
+
+
+def _pick_tile(c: int, pref: int = 128) -> int:
+    if c % pref == 0:
+        return pref
+    for t in (64, 32, 16, 8):
+        if c % t == 0:
+            return t
+    return c
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv2d(x: jax.Array, w: jax.Array, *, interpret: bool = False
+           ) -> jax.Array:
+    """x: (N, H, W, CI); w: (KH, KW, CI, CO).  Stride-1 VALID conv."""
+    N, H, W, CI = x.shape
+    KH, KW, _, CO = w.shape
+    HO, WO = H - KH + 1, W - KW + 1
+    tci = _pick_tile(CI)
+    tco = _pick_tile(CO)
+    n_ci = CI // tci
+
+    grid = (N, 1, CO // tco, n_ci)
+    kernel = functools.partial(_conv2d_kernel, kh=KH, kw=KW,
+                               n_ci_blocks=n_ci)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, W, tci), lambda n, h, co, ci: (n, 0, 0, ci)),
+            pl.BlockSpec((KH, KW, tci, tco),
+                         lambda n, h, co, ci: (0, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((1, HO, WO, tco),
+                               lambda n, h, co, ci: (n, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((N, HO, WO, CO), x.dtype),
+        scratch_shapes=[pltpu.VMEM((HO * WO, tco), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

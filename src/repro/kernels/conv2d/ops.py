@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the conv2d Pallas kernel with shape guards."""
+
+import jax
+
+from .conv2d import conv2d as _conv2d_pallas
+from .ref import conv2d_ref
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, use_pallas: bool = True,
+           interpret: bool = False) -> jax.Array:
+    """Stride-1 VALID NHWC conv.  Falls back to the XLA conv when the
+    shape is unsupported by the kernel (tiny channel counts)."""
+    N, H, W, CI = x.shape
+    KH, KW, CI2, CO = w.shape
+    assert CI == CI2, (x.shape, w.shape)
+    if not use_pallas or H < KH or W < KW:
+        return conv2d_ref(x, w)
+    return _conv2d_pallas(x, w, interpret=interpret)

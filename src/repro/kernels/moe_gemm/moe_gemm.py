@@ -1,0 +1,69 @@
+"""Pallas TPU grouped (expert-batched) GEMM for MoE FFNs.
+
+Computes y[e] = x[e] @ w[e] for every expert's capacity buffer — the
+hot matmul of the capacity-dispatch MoE (granite: 40 experts, mixtral:
+8).  Grid (E, C/TC, F/TF, D/TD) with the contraction axis innermost so
+the fp32 accumulator persists in VMEM scratch across its sequential
+iterations; C/F tiles are MXU-aligned where the shapes allow.
+
+On the dry-run meshes the expert hidden dim is model-sharded, so each
+chip runs this kernel on its (E, C, d) x (E, d, F/16) slice.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_d: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(di == n_d - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _tile(n: int, pref: int) -> int:
+    if n % pref == 0:
+        return pref
+    for t in (256, 128, 64, 32, 16, 8, 4, 2):
+        if n % t == 0:
+            return min(t, n)
+    return n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_gemm(x: jax.Array, w: jax.Array, *, interpret: bool = False
+             ) -> jax.Array:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    tc = _tile(C, 128)
+    tf = _tile(F, 128)
+    td = _tile(D, 512)
+    n_d = D // td
+    kernel = functools.partial(_moe_gemm_kernel, n_d=n_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // tc, F // tf, n_d),
+        in_specs=[
+            pl.BlockSpec((1, tc, td), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, td, tf), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, tc, tf), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tc, tf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

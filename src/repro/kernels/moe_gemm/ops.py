@@ -1,0 +1,13 @@
+"""jit'd public wrapper for the grouped expert GEMM kernel."""
+
+import jax
+
+from .moe_gemm import moe_gemm as _moe_gemm_pallas
+from .ref import moe_gemm_ref
+
+
+def moe_gemm(x: jax.Array, w: jax.Array, *, use_pallas: bool = True,
+             interpret: bool = False) -> jax.Array:
+    if not use_pallas:
+        return moe_gemm_ref(x, w)
+    return _moe_gemm_pallas(x, w, interpret=interpret)

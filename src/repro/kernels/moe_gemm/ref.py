@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x, w)

@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the SSD intra-chunk kernel."""
+
+import jax
+
+from .ssd_chunk import ssd_chunk as _ssd_pallas
+from .ref import ssd_chunk_ref
+
+
+def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+              Cm: jax.Array, *, use_pallas: bool = True,
+              interpret: bool = False):
+    if not use_pallas:
+        return ssd_chunk_ref(x, dt, A, Bm, Cm)
+    return _ssd_pallas(x, dt, A, Bm, Cm, interpret=interpret)

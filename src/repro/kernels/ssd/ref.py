@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                  Bm: jax.Array, Cm: jax.Array):
+    """x: (BC, Q, H, P); dt: (BC, Q, H); A: (H,); Bm/Cm: (BC, Q, N).
+
+    Returns (y_intra, state):
+      y_intra[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+      state      = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    """
+    a = (dt * A).astype(jnp.float32)          # (BC, Q, H)
+    cum = jnp.cumsum(a, axis=1)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]          # (BC,Q,Q,H)
+    Q = x.shape[1]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bin,bjn->bij", Cm, Bm)               # (BC,Q,Q)
+    M = cb[..., None] * L * dt[:, None, :, :].astype(jnp.float32)
+    y = jnp.einsum("bijh,bjhp->bihp", M.astype(x.dtype), x)
+    decay_tail = jnp.exp(cum[:, -1:, :] - cum) * dt.astype(jnp.float32)
+    st = jnp.einsum("bqn,bqh,bqhp->bhpn", Bm,
+                    decay_tail.astype(x.dtype), x)
+    return y.astype(x.dtype), st.astype(x.dtype)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk step.
+
+Computes, per (batch*chunk, head) grid cell, the quadratic intra-chunk
+output and the chunk state summary of the SSD algorithm
+(arXiv:2405.21060):
+
+    Y_intra[i] = sum_{j<=i} (C_i . B_j) exp(cumA_i - cumA_j) dt_j x_j
+    state      = sum_j B_j^T (exp(cumA_last - cumA_j) dt_j x_j)
+
+The inter-chunk recurrence (a tiny (B,H,P,N) scan over chunks) stays in
+JAX — it is O(S/Q) sequential steps and bandwidth-trivial; the MXU-heavy
+(Q x Q) @ (Q x P) work lives here.  Chunk length Q and head dim P are
+the MXU-aligned tile dims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, st_ref):
+    x = x_ref[0, :, 0, :]          # (Q, P)
+    dt = dt_ref[0, :, 0]           # (Q,)
+    A = a_ref[0]                   # ()
+    Bm = b_ref[0]                  # (Q, N)
+    Cm = c_ref[0]                  # (Q, N)
+
+    a = (dt * A).astype(jnp.float32)            # (Q,)
+    cum = jnp.cumsum(a)                          # (Q,)
+    seg = cum[:, None] - cum[None, :]            # (Q, Q)
+    Q = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)   # (Q, Q)
+    cb = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    M = cb * L * dt[None, :].astype(jnp.float32)
+    y = jnp.dot(M.astype(x.dtype), x, preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_tail = jnp.exp(cum[-1] - cum) * dt.astype(jnp.float32)  # (Q,)
+    xw = x.astype(jnp.float32) * decay_tail[:, None]              # (Q, P)
+    st = jnp.dot(xw.T.astype(x.dtype), Bm,
+                 preferred_element_type=jnp.float32)              # (P, N)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+              Cm: jax.Array, *, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    x: (BC, Q, H, P); dt: (BC, Q, H) (post-softplus); A: (H,);
+    Bm/Cm: (BC, Q, N).  Returns (y_intra (BC,Q,H,P), state (BC,H,P,N)).
+    """
+    BC, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    grid = (BC, H)
+    out_shapes = (
+        jax.ShapeDtypeStruct((BC, Q, H, P), x.dtype),
+        jax.ShapeDtypeStruct((BC, H, P, N), x.dtype),
+    )
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bc, h: (bc, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bc, h: (bc, 0, h)),
+            pl.BlockSpec((1,), lambda bc, h: (h,)),
+            pl.BlockSpec((1, Q, N), lambda bc, h: (bc, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda bc, h: (bc, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, Q, 1, P), lambda bc, h: (bc, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bc, h: (bc, h, 0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

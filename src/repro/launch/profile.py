@@ -1,0 +1,61 @@
+"""Profile a saved dry-run HLO: top computations by FLOPs / collective
+bytes and the biggest individual collective ops — the evidence base for
+each §Perf hypothesis.
+
+    PYTHONPATH=src python -m repro.launch.profile \
+        experiments/dryrun/mixtral-8x7b__train_4k__pod1.hlo.gz
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+from pathlib import Path
+
+from .hlo_analysis import (COLLECTIVES, analyze_hlo, parse_hlo,
+                           _shape_bytes_all)
+from .roofline import TPU_PEAK_FLOPS, TPU_HBM_BW, TPU_ICI_BW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo", help=".hlo.gz (or plain text) file")
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+    path = Path(args.hlo)
+    text = (gzip.open(path, "rt").read() if path.suffix == ".gz"
+            else path.read_text())
+
+    census = analyze_hlo(text)
+    print(f"totals: {census.flops:.3e} FLOPs "
+          f"({census.flops/TPU_PEAK_FLOPS:.3f} s)   "
+          f"{census.hbm_bytes:.3e} HBM B "
+          f"({census.hbm_bytes/TPU_HBM_BW:.3f} s)   "
+          f"{census.total_coll_bytes:.3e} coll B "
+          f"({census.total_coll_bytes/TPU_ICI_BW:.3f} s)")
+    print("\ncollectives by kind:")
+    for k, v in sorted(census.coll_bytes.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v:.3e} B  x{int(census.coll_counts[k])}")
+
+    print(f"\ntop {args.top} computations by FLOPs:")
+    rows = sorted(census.by_computation.items(),
+                  key=lambda kv: -kv[1]["flops"])[:args.top]
+    for n, d in rows:
+        print(f"  {n[:56]:56s} mult={d['mult']:8.0f} "
+              f"flops={d['flops']:.3e} coll={d['coll_bytes']:.3e}")
+
+    print(f"\ntop {args.top} individual collective ops:")
+    comps, _ = parse_hlo(text)
+    ops = []
+    for cn, comp in comps.items():
+        for op in comp.ops:
+            if op.opcode in COLLECTIVES:
+                ops.append((_shape_bytes_all(op.result), cn, op))
+    ops.sort(key=lambda t: -t[0])
+    for b, cn, op in ops[:args.top]:
+        meta = op.rest[op.rest.find("op_name="):][:110]
+        print(f"  {b/1e9:8.3f} GB {op.opcode:18s} in {cn[:36]:36s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

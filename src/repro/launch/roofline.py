@@ -1,0 +1,130 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (197e12 bf16)
+    memory     = HLO_bytes / HBM_bw               (819e9 B/s)
+    collective = collective_bytes / link_bw       (~50e9 B/s)
+
+``cost_analysis`` provides per-device FLOPs/bytes; collective bytes are
+parsed out of the post-SPMD HLO text (operand shapes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+TPU_PEAK_FLOPS = 197e12
+TPU_HBM_BW = 819e9
+TPU_ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' string."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op, per kind.
+
+    HLO lines look like:
+      %ag = bf16[8,128]{1,0} all-gather(bf16[8,8]{1,0} %x), ...
+    We count the op's *result* bytes (the traffic actually moved; for
+    tuples, the sum of elements).
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match result shape:  "%name = <shape> kind(" or tuple
+            idx = ls.find(f" {kind}(")
+            if idx < 0 or "=" not in ls[:idx]:
+                continue
+            lhs = ls[:idx]
+            rhs = lhs.split("=", 1)[1].strip()
+            total = 0
+            if rhs.startswith("("):  # tuple shape
+                for m in _SHAPE_RE.finditer(rhs):
+                    total += _shape_bytes(m.group(0))
+            else:
+                m = _SHAPE_RE.match(rhs)
+                if m:
+                    total = _shape_bytes(m.group(0))
+            out[kind] += total
+            count[kind] += 1
+            break
+    out["_counts"] = count
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: dict
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / TPU_PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / TPU_HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / TPU_ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # some versions return [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    text = compiled.as_text()
+    cb = collective_bytes(text)
+    counts = cb.pop("_counts")
+    return Roofline(flops, byts, float(sum(cb.values())),
+                    {"bytes": cb, "counts": counts})

@@ -1,0 +1,143 @@
+"""PartitionSpec assignment for the decoder substrate on the production
+mesh (baseline tensor-parallel + data-parallel layout; DESIGN.md §5).
+
+Rules (model axis = 'model', batch over ('pod','data') where divisible):
+  * embedding/head: padded-vocab dim over 'model'
+  * attention projections: flattened head*dim output over 'model'
+  * FFN/expert hidden dim over 'model'
+  * mamba inner projections: d_inner-derived dims over 'model' where
+    divisible, else replicated
+  * caches/activations: batch over data axes; head_dim or kv-heads over
+    'model' where divisible
+Dims that do not divide the axis size are replicated (a helper checks).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.transformer.config import ArchConfig
+from ..models.transformer.layers import (AttnParams, MlpParams, MoeParams,
+                                         MambaParams)
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def _spec(shapes, mesh, dim_axis: dict[int, str]) -> P:
+    """P with axis per dim if divisible, else None."""
+    parts = [None] * len(shapes)
+    for d, ax in dim_axis.items():
+        if _div(shapes[d], mesh, ax):
+            parts[d] = ax
+    return P(*parts)
+
+
+def param_pspecs(cfg: ArchConfig, params_shape: Any, mesh) -> Any:
+    """PartitionSpec pytree matching a params pytree (of ShapeDtypeStruct
+    or arrays)."""
+
+    def leaf_spec(path: tuple, leaf) -> P:
+        sh = leaf.shape
+        names = [getattr(p, "name", getattr(p, "key", None)) or str(p)
+                 for p in path]
+        key = "/".join(str(n) for n in names)
+        nd = len(sh)
+        if "embed" in key:
+            return _spec(sh, mesh, {0: "model"})
+        if "head" in key:
+            return _spec(sh, mesh, {1: "model"})
+        if "moe" in key:
+            if key.endswith("router"):
+                return P(*([None] * nd))
+            if key.endswith("w2"):
+                return _spec(sh, mesh, {nd - 2: "model"})
+            return _spec(sh, mesh, {nd - 1: "model"})
+        if "attn" in key:
+            if key.endswith("wo"):
+                return _spec(sh, mesh, {nd - 2: "model"})
+            if any(key.endswith(s) for s in ("wq", "wk", "wv", "bq", "bk",
+                                             "bv")):
+                return _spec(sh, mesh, {nd - 1: "model"})
+        if "mlp" in key:
+            if key.endswith("w2"):
+                return _spec(sh, mesh, {nd - 2: "model"})
+            return _spec(sh, mesh, {nd - 1: "model"})
+        if "mamba" in key:
+            if key.endswith("w_in"):
+                return _spec(sh, mesh, {nd - 1: "model"})
+            if key.endswith("w_out"):
+                return _spec(sh, mesh, {nd - 2: "model"})
+            if key.endswith(("conv_w", "conv_b", "norm_w")):
+                return _spec(sh, mesh, {nd - 1: "model"})
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_pspecs(cfg: ArchConfig, batch_shape: Any, mesh,
+                 data_axes: tuple[str, ...]) -> Any:
+    """Specs for a train/prefill batch dict."""
+    total = 1
+    for a in data_axes:
+        total *= mesh.shape[a]
+
+    def leaf_spec(path, leaf):
+        sh = leaf.shape
+        b_ax = data_axes if sh and sh[0] % total == 0 else None
+        if b_ax is None:
+            return P(*([None] * len(sh)))
+        return P(b_ax, *([None] * (len(sh) - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_shape)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shape: Any, mesh,
+                 data_axes: tuple[str, ...],
+                 mode: str = "feature") -> Any:
+    """Specs for a decode cache: batch on dim 1 (dim 0 is layers), plus
+
+    mode='feature'  — shard the last (head_dim-ish) dim over 'model'
+                      (baseline layout), or
+    mode='sequence' — shard the KV cache's sequence dim (dim 2) over
+                      'model' (§Perf iteration 3: flash-decoding-style
+                      partitioning; attention contracts locally over the
+                      sequence shard and all-reduces only the small
+                      softmax stats/output instead of all-gathering the
+                      multi-GB cache every layer).
+    """
+    total = 1
+    for a in data_axes:
+        total *= mesh.shape[a]
+
+    def leaf_spec(path, leaf):
+        sh = leaf.shape
+        names = "/".join(str(getattr(p, "name", getattr(p, "key", p)))
+                         for p in path)
+        nd = len(sh)
+        if nd == 0:
+            return P()
+        parts = [None] * nd
+        if nd >= 2 and sh[1] % total == 0 and sh[1] >= total:
+            parts[1] = data_axes
+        is_kv = names in ("k", "v") or names.endswith(("/k", "/v")) \
+            or "shared_k" in names or "shared_v" in names
+        if mode == "sequence" and is_kv and nd >= 3 \
+                and _div(sh[2], mesh, "model"):
+            parts[2] = "model"
+            return P(*parts)
+        if "k" in names or "v" in names or "ssm" in names \
+                or "conv" in names:
+            # shard the last (feature) dims over 'model' where divisible
+            for d in range(nd - 1, 1, -1):
+                if _div(sh[d], mesh, "model"):
+                    parts[d] = "model"
+                    break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)

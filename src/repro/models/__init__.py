@@ -1,0 +1,1 @@
+"""Model substrates: CNN zoo (paper) and transformer decoders (assigned archs)."""

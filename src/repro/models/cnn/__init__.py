@@ -1,0 +1,6 @@
+"""Graph-defined executable CNNs used in the paper's evaluation."""
+
+from .builder import CNNDef, GB
+from . import zoo
+
+__all__ = ["CNNDef", "GB", "zoo"]

@@ -1,0 +1,6 @@
+"""Decoder LM substrate for the assigned architecture pool."""
+
+from .config import ArchConfig
+from . import layers, model
+
+__all__ = ["ArchConfig", "layers", "model"]

@@ -1,0 +1,465 @@
+"""Decoder LM assembly: init, forward (train), prefill, one-token decode.
+
+Layers are stacked on a leading L axis and applied with ``lax.scan``
+(keeps HLO size O(1) in depth — essential for the 512-device dry-run),
+with ``jax.checkpoint`` rematerialization for training.
+
+Supports the assigned families:
+  dense / moe        — pattern 'attn' (+ optional MoE FFN, sliding window)
+  ssm                — pattern 'mamba' (Mamba2/SSD blocks)
+  hybrid (zamba2)    — 'mamba' pattern + one *shared* attention+MLP block
+                       applied every k layers (one weight set, per-site
+                       KV caches)
+  vlm / audio        — same decoders with input_mode='embeds' (frontend
+                       stubs provide patch/frame embeddings)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (AttnParams, MlpParams, MoeParams, MambaParams,
+                     attention_prefill, attention_decode, mlp, moe,
+                     mamba2_prefill, mamba2_decode, rms_norm)
+
+Params = dict
+Cache = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm(key, shape, scale):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                dtype=jnp.float32) -> Params:
+    L, d = cfg.n_layers, cfg.d_model
+    keys = iter(jax.random.split(key, 64))
+    p: Params = {}
+    if cfg.input_mode == "tokens":
+        p["embed"] = _norm(next(keys), (cfg.vocab_padded, d), 0.02)
+    p["head"] = _norm(next(keys), (d, cfg.vocab_padded), 1 / math.sqrt(d))
+    p["final_norm"] = jnp.ones((d,))
+
+    def attn_params(k, stack: int | None):
+        sh = (lambda *s: (stack, *s)) if stack else (lambda *s: s)
+        ks = jax.random.split(k, 4)
+        nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        return AttnParams(
+            wq=_norm(ks[0], sh(d, nq * hd), 1 / math.sqrt(d)),
+            wk=_norm(ks[1], sh(d, nkv * hd), 1 / math.sqrt(d)),
+            wv=_norm(ks[2], sh(d, nkv * hd), 1 / math.sqrt(d)),
+            wo=_norm(ks[3], sh(nq * hd, d), 1 / math.sqrt(nq * hd)),
+            bq=jnp.zeros(sh(nq * hd)) if cfg.qkv_bias else None,
+            bk=jnp.zeros(sh(nkv * hd)) if cfg.qkv_bias else None,
+            bv=jnp.zeros(sh(nkv * hd)) if cfg.qkv_bias else None,
+        )
+
+    def mlp_params(k, stack: int | None):
+        sh = (lambda *s: (stack, *s)) if stack else (lambda *s: s)
+        ks = jax.random.split(k, 3)
+        ff = cfg.d_ff
+        return MlpParams(
+            w1=_norm(ks[0], sh(d, ff), 1 / math.sqrt(d)),
+            w3=_norm(ks[1], sh(d, ff), 1 / math.sqrt(d)),
+            w2=_norm(ks[2], sh(ff, d), 1 / math.sqrt(ff)),
+        )
+
+    layers: dict = {"ln1": jnp.ones((L, d))}
+    if cfg.layer_pattern == "attn":
+        layers["attn"] = attn_params(next(keys), L)
+        layers["ln2"] = jnp.ones((L, d))
+        if cfg.is_moe:
+            ks = jax.random.split(next(keys), 4)
+            E, ff = cfg.n_experts, cfg.d_ff
+            layers["moe"] = MoeParams(
+                router=_norm(ks[0], (L, d, E), 1 / math.sqrt(d)),
+                w1=_norm(ks[1], (L, E, d, ff), 1 / math.sqrt(d)),
+                w3=_norm(ks[2], (L, E, d, ff), 1 / math.sqrt(d)),
+                w2=_norm(ks[3], (L, E, ff, d), 1 / math.sqrt(ff)),
+            )
+        else:
+            layers["mlp"] = mlp_params(next(keys), L)
+    elif cfg.layer_pattern == "mamba":
+        ks = jax.random.split(next(keys), 8)
+        di, N, H, CK = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+        conv_ch = di + 2 * N
+        layers["mamba"] = MambaParams(
+            w_in=_norm(ks[0], (L, d, 2 * di + 2 * N), 1 / math.sqrt(d)),
+            w_dt=_norm(ks[1], (L, d, H), 1 / math.sqrt(d)),
+            dt_bias=jnp.log(jnp.broadcast_to(
+                jnp.expm1(jnp.linspace(1e-3, 0.1, H)), (L, H))),
+            conv_w=_norm(ks[2], (L, CK, conv_ch), 1 / math.sqrt(CK)),
+            conv_b=jnp.zeros((L, conv_ch)),
+            A_log=jnp.log(jnp.broadcast_to(
+                jnp.linspace(1.0, 16.0, H), (L, H))),
+            Dskip=jnp.ones((L, H)),
+            norm_w=jnp.ones((L, di)),
+            w_out=_norm(ks[3], (L, di, d), 1 / math.sqrt(di)),
+        )
+    else:
+        raise ValueError(cfg.layer_pattern)
+    p["layers"] = layers
+
+    if cfg.shared_attn_every:
+        p["shared"] = {
+            "ln1": jnp.ones((d,)),
+            "attn": attn_params(next(keys), None),
+            "ln2": jnp.ones((d,)),
+            "mlp": mlp_params(next(keys), None),
+        }
+    return jax.tree.map(lambda a: a.astype(dtype), p)
+
+
+# ---------------------------------------------------------------------------
+# shared (Zamba2) helpers
+# ---------------------------------------------------------------------------
+
+def _shared_apply_flags(cfg: ArchConfig) -> jnp.ndarray:
+    i = jnp.arange(cfg.n_layers)
+    if not cfg.shared_attn_every:
+        return jnp.zeros((cfg.n_layers,), bool), jnp.zeros((cfg.n_layers,),
+                                                           jnp.int32)
+    apply = ((i + 1) % cfg.shared_attn_every) == 0
+    app_idx = jnp.cumsum(apply.astype(jnp.int32)) - 1
+    return apply, jnp.maximum(app_idx, 0)
+
+
+def n_shared_apps(cfg: ArchConfig) -> int:
+    return (cfg.n_layers // cfg.shared_attn_every
+            if cfg.shared_attn_every else 0)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring): full-sequence, no cache
+# ---------------------------------------------------------------------------
+
+def _constrain(x, act_pspec):
+    if act_pspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, act_pspec)
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict,
+            remat: bool = True, unroll: bool = False,
+            act_pspec=None, moe_pspec=None, ring=None) -> jax.Array:
+    """Returns logits (B, S, vocab_padded) with padded slots masked.
+
+    ``act_pspec`` (a PartitionSpec for the (B, S, d) activations) lets
+    the launcher request e.g. sequence sharding over the model axis —
+    §Perf iteration 2: attention scores then materialize only for the
+    local S/model_parallel rows instead of being replicated."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"]
+    B, S, d = x.shape
+    x = _constrain(x, act_pspec)
+    shared = params.get("shared")
+    apply_flags, app_idx = _shared_apply_flags(cfg)
+
+    def block(x, lp):
+        if cfg.layer_pattern == "attn":
+            h, _ = attention_prefill(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window, ring=ring)
+            x = x + h
+            if cfg.is_moe:
+                m, _aux = moe(lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                              cfg.moe_top_k, cfg.capacity_factor,
+                              buf_pspec=moe_pspec)
+            else:
+                m = mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + m
+        # mamba
+        h, _ = mamba2_prefill(
+            lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+            d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+            n_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+            norm_eps=cfg.norm_eps)
+        x = x + h
+        return x
+
+    def shared_block(x):
+        h, _ = attention_prefill(
+            AttnParams(**{k: v for k, v in
+                          zip(AttnParams._fields, shared["attn"])}),
+            rms_norm(x, shared["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_theta=cfg.rope_theta, sliding_window=cfg.sliding_window)
+        x = x + h
+        m = mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps))
+        return x + m
+
+    def body(x, scanned):
+        lp, use_shared = scanned
+        x = block(x, lp)
+        if shared is not None:
+            x = jax.lax.cond(use_shared, shared_block, lambda y: y, x)
+        return _constrain(x, act_pspec), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["layers"], apply_flags),
+                        unroll=cfg.n_layers if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"]
+    if cfg.vocab_padded > cfg.vocab_size:
+        pad_mask = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+    return logits
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict,
+            unroll: bool = False, act_pspec=None,
+            moe_pspec=None, ring=None) -> jax.Array:
+    logits = forward(cfg, params, batch, unroll=unroll,
+                     act_pspec=act_pspec, moe_pspec=moe_pspec, ring=ring)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               dtype=jnp.float32) -> Cache:
+    L, d = cfg.n_layers, cfg.d_model
+    W = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    cache: Cache = {"len": jnp.zeros((), jnp.int32)}
+    if cfg.layer_pattern == "attn":
+        cache["k"] = jnp.zeros((L, batch, W, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, W, cfg.n_kv_heads, cfg.hd), dtype)
+    else:
+        CK, di, N = cfg.ssm_conv, cfg.d_inner, cfg.ssm_state
+        cache["conv"] = jnp.zeros((L, batch, CK - 1, di + 2 * N), dtype)
+        cache["ssm"] = jnp.zeros((L, batch, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, N), dtype)
+    if cfg.shared_attn_every:
+        A = n_shared_apps(cfg)
+        Ws = min(seq_len, cfg.sliding_window) if cfg.sliding_window \
+            else seq_len
+        cache["shared_k"] = jnp.zeros(
+            (A, batch, Ws, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["shared_v"] = jnp.zeros(
+            (A, batch, Ws, cfg.n_kv_heads, cfg.hd), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode: one new token against the cache
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Cache,
+                inputs: dict, unroll: bool = False
+                ) -> tuple[jax.Array, Cache]:
+    """inputs: {'token': (B,) int32} or {'embed': (B, d)}.
+
+    Returns (logits (B, vocab_padded), new cache).
+    """
+    if cfg.input_mode == "tokens":
+        x = params["embed"][inputs["token"]][:, None, :]   # (B, 1, d)
+    else:
+        x = inputs["embed"][:, None, :]
+    B = x.shape[0]
+    shared = params.get("shared")
+    apply_flags, app_idx = _shared_apply_flags(cfg)
+    cache_len = cache["len"]
+
+    def shared_block(x, sk, sv):
+        h, nk, nv = attention_decode(
+            AttnParams(**{k: v for k, v in
+                          zip(AttnParams._fields, shared["attn"])}),
+            rms_norm(x, shared["ln1"], cfg.norm_eps), sk, sv, cache_len,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_theta=cfg.rope_theta, sliding_window=cfg.sliding_window)
+        x = x + h
+        m = mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps))
+        return x + m, nk, nv
+
+    def body(carry, scanned):
+        x, shared_k, shared_v = carry
+        if cfg.layer_pattern == "attn":
+            lp, ck, cv, use_shared, ai = scanned
+            h, nk, nv = attention_decode(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), ck, cv,
+                cache_len, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                hd=cfg.hd, rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window)
+            x = x + h
+            if cfg.is_moe:
+                m, _ = moe(lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                           cfg.moe_top_k, cfg.capacity_factor)
+            else:
+                m = mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            x = x + m
+            new_layer_cache = (nk, nv)
+        else:
+            lp, cconv, cssm, use_shared, ai = scanned
+            h, nc = mamba2_decode(
+                lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                {"conv": cconv, "ssm": cssm},
+                d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                n_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+                norm_eps=cfg.norm_eps)
+            x = x + h
+            new_layer_cache = (nc["conv"], nc["ssm"])
+        if shared is not None:
+            sk = jax.lax.dynamic_index_in_dim(shared_k, ai, 0,
+                                              keepdims=False)
+            sv = jax.lax.dynamic_index_in_dim(shared_v, ai, 0,
+                                              keepdims=False)
+            x2, nk2, nv2 = shared_block(x, sk, sv)
+            x = jnp.where(use_shared, x2, x)
+            nk2 = jnp.where(use_shared, nk2, sk)
+            nv2 = jnp.where(use_shared, nv2, sv)
+            shared_k = jax.lax.dynamic_update_index_in_dim(
+                shared_k, nk2, ai, 0)
+            shared_v = jax.lax.dynamic_update_index_in_dim(
+                shared_v, nv2, ai, 0)
+        return (x, shared_k, shared_v), new_layer_cache
+
+    zk = cache.get("shared_k", jnp.zeros((), x.dtype))
+    zv = cache.get("shared_v", jnp.zeros((), x.dtype))
+    if cfg.layer_pattern == "attn":
+        xs = (params["layers"], cache["k"], cache["v"], apply_flags, app_idx)
+    else:
+        xs = (params["layers"], cache["conv"], cache["ssm"], apply_flags,
+              app_idx)
+    (x, zk, zv), new_caches = jax.lax.scan(
+        body, (x, zk, zv), xs, unroll=cfg.n_layers if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["head"])[:, 0]
+    if cfg.vocab_padded > cfg.vocab_size:
+        pad_mask = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+
+    new_cache: Cache = {"len": cache_len + 1}
+    if cfg.layer_pattern == "attn":
+        new_cache["k"], new_cache["v"] = new_caches
+    else:
+        new_cache["conv"], new_cache["ssm"] = new_caches
+    if cfg.shared_attn_every:
+        new_cache["shared_k"], new_cache["shared_v"] = zk, zv
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: process a full prompt, returning last logits + a filled cache
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params: Params, batch: dict,
+            unroll: bool = False, act_pspec=None, moe_pspec=None,
+            ring=None) -> tuple[jax.Array, Cache]:
+    """batch: {'tokens': (B, S)} or {'embeds': (B, S, d)}."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"]
+    B, S, d = x.shape
+    x = _constrain(x, act_pspec)
+    shared = params.get("shared")
+    apply_flags, app_idx = _shared_apply_flags(cfg)
+    W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+
+    def keep_window(k):  # (B, S, K, D) -> last W entries, ring-aligned
+        if W >= S:
+            return k
+        # decode writes token t at slot t % W: place token S-W+i at
+        # slot (S-W+i) % W == (i + S) % W  ->  roll by S % W
+        return jnp.roll(k[:, -W:], shift=S % W, axis=1)
+
+    def shared_block(x):
+        h, kv = attention_prefill(
+            AttnParams(**{k: v for k, v in
+                          zip(AttnParams._fields, shared["attn"])}),
+            rms_norm(x, shared["ln1"], cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_theta=cfg.rope_theta, sliding_window=cfg.sliding_window)
+        x = x + h
+        m = mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps))
+        return x + m, kv
+
+    def body(carry, scanned):
+        x, shared_k, shared_v = carry
+        lp, use_shared, ai = scanned
+        if cfg.layer_pattern == "attn":
+            h, kv = attention_prefill(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                rope_theta=cfg.rope_theta,
+                sliding_window=cfg.sliding_window, ring=ring)
+            x = x + h
+            if cfg.is_moe:
+                m, _ = moe(lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                           cfg.moe_top_k, cfg.capacity_factor,
+                           buf_pspec=moe_pspec)
+            else:
+                m = mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            x = x + m
+            x = _constrain(x, act_pspec)
+            layer_cache = (keep_window(kv["k"]), keep_window(kv["v"]))
+        else:
+            h, nc = mamba2_prefill(
+                lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                n_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim,
+                norm_eps=cfg.norm_eps)
+            x = x + h
+            layer_cache = (nc["conv"], nc["ssm"])
+        if shared is not None:
+            x2, kv2 = shared_block(x)
+            x = jnp.where(use_shared, x2, x)
+            nk2 = keep_window(kv2["k"])
+            nv2 = keep_window(kv2["v"])
+            upd = use_shared.astype(shared_k.dtype)
+            shared_k = jax.lax.dynamic_update_index_in_dim(
+                shared_k,
+                upd * nk2 + (1 - upd) * jax.lax.dynamic_index_in_dim(
+                    shared_k, ai, 0, keepdims=False),
+                ai, 0)
+            shared_v = jax.lax.dynamic_update_index_in_dim(
+                shared_v,
+                upd * nv2 + (1 - upd) * jax.lax.dynamic_index_in_dim(
+                    shared_v, ai, 0, keepdims=False),
+                ai, 0)
+        return (x, shared_k, shared_v), layer_cache
+
+    A = n_shared_apps(cfg)
+    zk = jnp.zeros((A, B, W, cfg.n_kv_heads, cfg.hd), x.dtype) if A else \
+        jnp.zeros((), x.dtype)
+    zv = jnp.zeros_like(zk)
+    (x, zk, zv), layer_caches = jax.lax.scan(
+        body, (x, zk, zv), (params["layers"], apply_flags, app_idx),
+        unroll=cfg.n_layers if unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["head"])
+    if cfg.vocab_padded > cfg.vocab_size:
+        pad_mask = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+
+    cache: Cache = {"len": jnp.asarray(S, jnp.int32)}
+    if cfg.layer_pattern == "attn":
+        cache["k"], cache["v"] = layer_caches
+    else:
+        cache["conv"], cache["ssm"] = layer_caches
+    if cfg.shared_attn_every:
+        cache["shared_k"], cache["shared_v"] = zk, zv
+    return logits, cache

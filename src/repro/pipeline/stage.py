@@ -1,0 +1,66 @@
+"""Stage executor: run one pipeline stage's fused segment on device tiles.
+
+The default executor iterates tiles sequentially (single-host testing —
+bit-exact with the monolithic forward).  ``jit_stage`` builds a jitted
+callable per stage for the serving runtime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import Graph
+from ..core.pipeline_dp import StagePlan
+from ..models.cnn.builder import CNNDef
+from .halo import TilePlan, plan_tiles, split_inputs, stitch_outputs
+
+
+@dataclass
+class StageExecutor:
+    """Executable form of one StagePlan for a CNNDef."""
+
+    model: CNNDef
+    nodes: frozenset[str]
+    fractions: list[float]
+    name: str = "stage"
+
+    def __post_init__(self):
+        g = self.model.graph
+        self.sinks = g.sinks(self.nodes)
+        self.plans: list[TilePlan] = plan_tiles(
+            g, self.nodes, self.model.full_sizes, self.model.input_size,
+            self.fractions)
+        # (node, outside_pred) pairs fed across the stage boundary
+        self.needs = self.model.boundary_needs(self.nodes)
+
+    def boundary_inputs(self, produced: Mapping[str, jax.Array],
+                        image: jax.Array | None
+                        ) -> dict[tuple[str, str | None], jax.Array]:
+        """Full-width boundary tensors for every (node, pred) need."""
+        return {(n, p): (image if p is None else produced[p])
+                for (n, p) in self.needs}
+
+    def __call__(self, params, produced: Mapping[str, jax.Array],
+                 image: jax.Array | None = None) -> dict[str, jax.Array]:
+        boundary = self.boundary_inputs(produced, image)
+        tiles_in = split_inputs(self.plans, self.needs, boundary)
+        tiles_out = []
+        for tp, tin in zip(self.plans, tiles_in):
+            if tp.empty:
+                tiles_out.append({})
+                continue
+            res = self.model.run_segment(params, self.nodes, tin,
+                                         ranges=(tp.out_ranges, tp.in_ranges))
+            tiles_out.append(res)
+        return stitch_outputs(self.plans, self.sinks, tiles_out)
+
+
+def executors_from_plan(model: CNNDef, stages: Sequence[StagePlan]
+                        ) -> list[StageExecutor]:
+    return [StageExecutor(model, st.nodes, list(st.fractions),
+                          name=f"stage{si}")
+            for si, st in enumerate(stages)]

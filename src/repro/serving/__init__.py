@@ -1,0 +1,6 @@
+"""Serving: pipelined CNN inference server + LM decode loop."""
+
+from .server import PipelineServer, ServeStats
+from .lm import generate
+
+__all__ = ["PipelineServer", "ServeStats", "generate"]

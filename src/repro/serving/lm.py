@@ -1,0 +1,51 @@
+"""Autoregressive decode loop for the transformer substrate."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer.config import ArchConfig
+from ..models.transformer import model as M
+
+
+def generate(cfg: ArchConfig, params, prompt: jax.Array, n_new: int,
+             temperature: float = 0.0, key=None):
+    """Greedy/temperature decode.  prompt: (B, S) int32.
+
+    Returns (B, n_new) generated tokens.  Prefill once, then one
+    decode_step per token (the cache is pre-padded with n_new slots).
+    """
+    B, S = prompt.shape
+    assert S >= 2, "prompt must have at least 2 tokens"
+    # prefill all but the last prompt token; the decode loop then feeds
+    # the last token and each generated token in turn
+    _, cache = M.prefill(cfg, params, {"tokens": prompt[:, :-1]})
+    if not cfg.sliding_window:
+        # grow kv capacity for the new tokens
+        def grow(k, v):
+            pad = [(0, 0)] * k.ndim
+            pad[2] = (0, n_new + 1)   # +1 for the fed-back last token
+            return jnp.pad(k, pad), jnp.pad(v, pad)
+        if "k" in cache:
+            cache["k"], cache["v"] = grow(cache["k"], cache["v"])
+        if "shared_k" in cache:
+            cache["shared_k"], cache["shared_v"] = grow(
+                cache["shared_k"], cache["shared_v"])
+
+    last = prompt[:, -1]
+    step = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, {"token": t}))
+    toks = []
+    tok = last
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    for i in range(n_new):
+        logits, cache = step(params, cache, tok)
+        if temperature > 0:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(sk, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        tok = tok.astype(jnp.int32)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

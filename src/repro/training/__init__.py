@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, steps, loop, checkpointing."""
+
+from .optim import AdamW, AdamWState, cosine_schedule
+from .steps import make_train_step, make_eval_step
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule", "make_train_step",
+           "make_eval_step"]

@@ -1,0 +1,33 @@
+"""Minimal pytree checkpointing (msgpack-free: npz + structure json)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str | Path, tree) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    np.savez(path.with_suffix(".npz"),
+             **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+    path.with_suffix(".tree").write_text(str(treedef))
+
+
+def load(path: str | Path, like) -> object:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    leaves_like, treedef = jax.tree.flatten(like)
+    leaves = [jax.numpy.asarray(data[f"leaf_{i}"])
+              for i in range(len(leaves_like))]
+    return jax.tree.unflatten(treedef, leaves)

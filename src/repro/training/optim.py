@@ -1,0 +1,73 @@
+"""Minimal-but-real AdamW + LR schedules (no optax dependency)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g),
+                         state.v, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mm, vv):
+            mh = mm / c1
+            vh = vv / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p
+            return (p - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,34 @@
+"""jit-able train / eval steps for the decoder substrate."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer.config import ArchConfig
+from ..models.transformer.model import loss_fn
+from .optim import AdamW, AdamWState
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW, unroll: bool = False,
+                    act_pspec=None, moe_pspec=None):
+    """Returns train_step(params, opt_state, batch) -> (params, state, loss)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, unroll=unroll,
+                              act_pspec=act_pspec,
+                              moe_pspec=moe_pspec))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig):
+    def eval_step(params, batch):
+        return loss_fn(cfg, params, batch)
+    return eval_step

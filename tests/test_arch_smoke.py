@@ -1,0 +1,98 @@
+"""Per-assigned-architecture smoke tests: a REDUCED variant of the same
+family (2 layers, d_model <= 512, <= 4 experts) runs one forward/train
+step and one decode step on CPU, asserting shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.transformer import model as M
+from repro.training.optim import AdamW
+from repro.training.steps import make_train_step
+
+B, S = 2, 16
+
+
+def _reduced(name):
+    return configs.get(name).reduced()
+
+
+def _batch(cfg):
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                  cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+    emb = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    return {"embeds": emb, "labels": jnp.zeros((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_smoke_forward_and_train(name):
+    cfg = _reduced(name)
+    assert cfg.n_layers <= 2 or cfg.shared_attn_every
+    assert cfg.d_model <= 512 and (cfg.n_experts or 0) <= 4
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = M.forward(cfg, params, batch, remat=False)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert not np.isnan(np.asarray(logits)).any(), name
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    _, _, loss = step(params, opt.init(params), batch)
+    assert np.isfinite(float(loss)), name
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_smoke_serve_step(name):
+    cfg = _reduced(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = M.init_cache(cfg, B, S)
+    if cfg.input_mode == "tokens":
+        inputs = {"token": jnp.zeros((B,), jnp.int32)}
+    else:
+        inputs = {"embed": jnp.zeros((B, cfg.d_model))}
+    logits, cache2 = M.decode_step(cfg, params, cache, inputs)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert not np.isnan(np.asarray(logits)).any(), name
+    assert int(cache2["len"]) == 1
+
+
+def test_exact_assigned_specs():
+    """The full configs carry the exact assignment numbers."""
+    spec = {
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    }
+    for name, (L, d, h, kv, ff, vocab) in spec.items():
+        c = configs.get(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (L, d, h, kv, ff, vocab), name
+    assert configs.get("qwen1.5-4b").qkv_bias
+    assert configs.get("mixtral-8x7b").sliding_window == 4096
+    assert configs.get("mixtral-8x7b").n_experts == 8
+    assert configs.get("mixtral-8x7b").moe_top_k == 2
+    assert configs.get("granite-moe-3b-a800m").n_experts == 40
+    assert configs.get("granite-moe-3b-a800m").moe_top_k == 8
+    assert configs.get("mamba2-370m").ssm_state == 128
+    assert configs.get("zamba2-2.7b").ssm_state == 64
+    assert configs.get("llava-next-34b").input_mode == "embeds"
+    assert configs.get("musicgen-medium").input_mode == "embeds"
+
+
+def test_long_context_variants():
+    from repro.configs.shapes import SHAPES, arch_for_shape
+    long = SHAPES["long_500k"]
+    for name in configs.ARCH_NAMES:
+        cfg = arch_for_shape(configs.get(name), long)
+        assert cfg.supports_long_context, name

@@ -1,0 +1,90 @@
+"""Bit-exactness of the pipelined/tiled execution vs monolithic forward.
+
+This is the system's core correctness property (paper §5.3: split and
+stitch must be lossless), property-tested over random CNN chains with
+hypothesis and over the real zoo DAGs.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import make_pi_cluster, plan
+from repro.models.cnn import zoo
+from repro.models.cnn.builder import GB
+from repro.pipeline import PipelineRunner
+from repro.pipeline.stage import StageExecutor
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("resnet34", dict(input_size=(96, 96), scale=0.1)),
+    ("inceptionv3", dict(input_size=(96, 96), scale=0.1)),
+    ("nasnet", dict(n_cells=3, input_size=(64, 64), scale=0.15)),
+])
+def test_pipeline_equals_monolithic(name, kw):
+    m = zoo.build(name, **kw)
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    p = plan(m.graph, cluster, m.input_size)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (2, m.input_size[1], m.input_size[0], 3))
+    ref = m.forward(params, x)
+    out = PipelineRunner(m, p.pipeline)(params, x)
+    for k in ref:
+        assert not np.isnan(np.asarray(ref[k])).any()
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_uneven_multiway_tile_split():
+    m = zoo.resnet34(input_size=(96, 96), scale=0.1)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 96, 96, 3))
+    ref = m.forward(params, x)
+    ex = StageExecutor(m, frozenset(m.graph.layers),
+                       [0.35, 0.3, 0.2, 0.15])
+    out = ex(params, {}, x)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.lists(st.sampled_from(
+        [("conv", 3, 1, 1), ("conv", 1, 1, 0), ("conv", 5, 1, 2),
+         ("conv", 3, 2, 1), ("pool", 2, 2, 0), ("conv", 3, 1, 0)]),
+        min_size=2, max_size=5),
+    st.integers(2, 4),
+    st.booleans(),
+)
+def test_random_chain_tiled_exact(ops, parts, with_skip):
+    """Random small chains (optionally with an add-skip) tile exactly."""
+    b = GB("rand", (24, 24))
+    x = b.conv(None, 4, 3, p=1)
+    skip_src = x
+    depth_since_skip = 0
+    for kind, k, s, p in ops:
+        if kind == "conv":
+            x = b.conv(x, 4, k, s=s, p=p)
+        else:
+            x = b.pool(x, k, s)
+        depth_since_skip += 1
+        if with_skip and depth_since_skip == 1 and s == 1 and \
+                b.sz[x] == b.sz[skip_src]:
+            x = b.add([x, skip_src])
+    m = b.done()
+    params = m.init(jax.random.PRNGKey(0))
+    img = jax.random.normal(jax.random.PRNGKey(1), (1, 24, 24, 3))
+    ref = m.forward(params, img)
+    sink_w = min(m.full_sizes[s][0] for s in m.graph.sinks())
+    if sink_w < parts:
+        return
+    ex = StageExecutor(m, frozenset(m.graph.layers), [1 / parts] * parts)
+    out = ex(params, {}, img)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-5)

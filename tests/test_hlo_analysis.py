@@ -1,0 +1,78 @@
+"""Loop-aware HLO census: verify dot-FLOPs x trip-count accounting on a
+module with known cost (this underpins the whole roofline table)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo, parse_hlo
+
+
+def _compiled_text(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile().as_text()
+
+
+def test_scan_of_matmuls_counted_with_trips():
+    L, M = 12, 64
+
+    def fn(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    text = _compiled_text(
+        fn, jax.ShapeDtypeStruct((L, M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32))
+    census = analyze_hlo(text)
+    expect = 2 * L * M * M * M      # L matmuls of (M,M)@(M,M)
+    assert abs(census.flops - expect) / expect < 0.05, \
+        (census.flops, expect)
+
+
+def test_unrolled_matches_scan_census():
+    L, M = 6, 32
+
+    def fn_scan(ws, x):
+        def body(x, w):
+            return x @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    def fn_unrolled(ws, x):
+        for i in range(L):
+            x = x @ ws[i]
+        return x
+
+    avals = (jax.ShapeDtypeStruct((L, M, M), jnp.float32),
+             jax.ShapeDtypeStruct((M, M), jnp.float32))
+    c_scan = analyze_hlo(_compiled_text(fn_scan, *avals))
+    c_unrl = analyze_hlo(_compiled_text(fn_unrolled, *avals))
+    assert abs(c_scan.flops - c_unrl.flops) / c_unrl.flops < 0.05
+
+
+def test_nested_scan_trip_products():
+    Lo, Li, M = 4, 5, 16
+
+    def fn(ws, x):
+        def outer(x, wrow):
+            def inner(x, w):
+                return x @ w, None
+            return jax.lax.scan(inner, x, wrow)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    text = _compiled_text(
+        fn, jax.ShapeDtypeStruct((Lo, Li, M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32))
+    census = analyze_hlo(text)
+    expect = 2 * Lo * Li * M ** 3
+    assert abs(census.flops - expect) / expect < 0.05
+
+
+def test_parse_finds_entry_and_computations():
+    def fn(x):
+        return jnp.sum(x * 2)
+
+    text = _compiled_text(fn, jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    comps, entry = parse_hlo(text)
+    assert entry in comps
+    assert comps[entry].ops

@@ -1,0 +1,93 @@
+"""Algorithm 2 + 3 tests: DP optimality vs exhaustive search, T_lim."""
+
+import math
+
+import pytest
+
+from repro.core import (Cluster, Device, PipelineDP, adjust_stages,
+                        chain_pieces, make_pi_cluster, plan)
+from repro.core.baselines import bfs_optimal
+from repro.core.partition import Piece, partition_graph
+from repro.models.cnn import zoo
+
+
+def small_chain():
+    m = zoo.vgg16(input_size=(64, 64), scale=0.1, head=False)
+    g = m.graph
+    order = g.topo_order[:8]
+    sub = type(g)()
+    for n in order:
+        sub.layers[n] = g.layers[n]
+    sub.edges = [(u, v) for u, v in g.edges if u in order and v in order]
+    sub._invalidate()
+    return m, sub
+
+
+def test_dp_matches_bfs_homogeneous():
+    m, g = small_chain()
+    pieces = [Piece(ns, 0.0, i) for i, ns in enumerate(chain_pieces(g))]
+    cluster = make_pi_cluster([1.0] * 4)
+    dp = PipelineDP(g, pieces, cluster, m.input_size)
+    plan_dp = dp.build()
+    bfs = bfs_optimal(g, pieces, cluster, m.input_size, budget_s=120)
+    assert bfs.extra["complete"]
+    assert plan_dp.period <= bfs.period * (1 + 1e-9)
+
+
+def test_t_lim_constrains_latency():
+    m, g = small_chain()
+    pieces = [Piece(ns, 0.0, i) for i, ns in enumerate(chain_pieces(g))]
+    cluster = make_pi_cluster([1.0] * 4)
+    free = PipelineDP(g, pieces, cluster, m.input_size).build()
+    assert free.feasible
+    if len(free.stages) > 1:
+        tight = PipelineDP(g, pieces, cluster, m.input_size,
+                           t_lim=free.latency * 0.9).build()
+        if tight.feasible:
+            assert tight.latency <= free.latency * 0.9 + 1e-12
+            assert tight.period >= free.period - 1e-12
+        # generous limit must stay feasible and match the free optimum
+        loose = PipelineDP(g, pieces, cluster, m.input_size,
+                           t_lim=free.latency * 2).build()
+        assert loose.feasible
+        assert loose.period <= free.period + 1e-12
+
+
+def test_device_slices_disjoint():
+    m, g = small_chain()
+    pieces = [Piece(ns, 0.0, i) for i, ns in enumerate(chain_pieces(g))]
+    cluster = make_pi_cluster([1.0] * 6)
+    p = PipelineDP(g, pieces, cluster, m.input_size).build()
+    names = [d.name for st in p.stages for d in st.devices]
+    assert len(names) == len(set(names))
+    assert len(names) <= 6
+
+
+def test_adjust_stages_uses_all_slots():
+    m, g = small_chain()
+    pieces = [Piece(ns, 0.0, i) for i, ns in enumerate(chain_pieces(g))]
+    hetero = make_pi_cluster([1.5, 1.5, 1.2, 0.8])
+    homo = hetero.homogenized()
+    hp = PipelineDP(g, pieces, homo, m.input_size).build()
+    final = adjust_stages(hp, hetero, g, m.input_size)
+    assigned = [d.name for st in final.stages for d in st.devices]
+    assert sorted(assigned) == sorted(d.name for d in hetero.devices)
+    # faster devices get larger output fractions within a stage
+    for st in final.stages:
+        if len(st.devices) >= 2:
+            caps = [d.capacity for d in st.devices]
+            assert all(
+                (caps[i] >= caps[j]) == (st.fractions[i] >= st.fractions[j])
+                for i in range(len(caps)) for j in range(len(caps)))
+
+
+def test_full_plan_beats_single_device():
+    m = zoo.vgg16(input_size=(96, 96), scale=0.15)
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    p = plan(m.graph, cluster, m.input_size)
+    single = Cluster([cluster.devices[0]], bandwidth=cluster.bandwidth)
+    from repro.core.cost import stage_cost
+    full = m.graph.forward_sizes(m.input_size)
+    sc = stage_cost(m.graph, frozenset(m.graph.layers), full,
+                    m.input_size, single.devices, single)
+    assert p.period < sc.total  # pipelining beats one device

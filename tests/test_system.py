@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the paper's system: plan -> execute ->
+serve, plus training/serving/checkpoint substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import make_pi_cluster, plan, simulate
+from repro.data.pipeline import RequestStream, TokenStream
+from repro.models.cnn import zoo
+from repro.models.transformer import model as M
+from repro.serving import PipelineServer, generate
+from repro.training import checkpoint
+from repro.training.loop import train
+
+
+def test_full_pico_flow_with_simulation():
+    m = zoo.squeezenet(input_size=(96, 96), scale=0.15)
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    p = plan(m.graph, cluster, m.input_size)
+    assert p.period > 0 and p.latency >= p.period
+    rep = simulate(p.pipeline, frames=32)
+    assert 0 < rep.avg_utilization <= 1.0
+    assert rep.period <= p.latency + 1e-9
+    # all devices assigned exactly once
+    names = [d.name for st in p.pipeline.stages for d in st.devices]
+    assert sorted(names) == sorted(d.name for d in cluster.devices)
+
+
+def test_pipeline_server_serves_requests():
+    m = zoo.vgg16(input_size=(96, 96), scale=0.1, head=False)
+    cluster = make_pi_cluster([1.5, 1.0])
+    server = PipelineServer(m, cluster).load()
+    H, W = m.input_size[1], m.input_size[0]
+    reqs = RequestStream(rate_per_s=5.0).generate(
+        4, lambda rng, i: jnp.asarray(
+            rng.standard_normal((1, H, W, 3)).astype(np.float32)))
+    outs, stats = server.serve(reqs)
+    assert stats.served == 4
+    assert stats.model_throughput_per_min > 0
+    ref = m.forward(server.params, reqs[0].payload)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(outs[0][k]),
+                                   np.asarray(ref[k]), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_lm_generate_matches_stepwise_argmax():
+    cfg = configs.get("llama3.2-1b").reduced(n_layers=2, d_model=64)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    toks = generate(cfg, params, prompt, n_new=4)
+    assert toks.shape == (2, 4)
+    # reference: teacher-forced argmax using full forward each step
+    seq = prompt
+    for t in range(4):
+        logits = M.forward(cfg, params, {"tokens": seq}, remat=False)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(toks[:, t]),
+                                      np.asarray(nxt))
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+
+
+def test_training_reduces_loss_and_checkpoints(tmp_path):
+    cfg = configs.get("llama3.2-1b").reduced(n_layers=2, d_model=64)
+    rep = train(cfg, steps=30, batch=4, seq=32, lr=3e-3, log_every=0,
+                ckpt_path=str(tmp_path / "ck"))
+    assert np.isfinite(rep.final_loss)
+    assert np.mean(rep.losses[-5:]) < np.mean(rep.losses[:5])
+    # roundtrip
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    loaded = checkpoint.load(tmp_path / "ck", params)
+    assert all(a.shape == b.shape for a, b in
+               zip(jax.tree.leaves(params), jax.tree.leaves(loaded)))
+
+
+def test_token_stream_learnable_structure():
+    s = TokenStream(vocab=97, batch=2, seq=16, seed=0)
+    b = next(iter(s))
+    assert b["tokens"].shape == (2, 16)
+    # labels are the shifted continuation of the same pattern
+    assert b["labels"].shape == (2, 16)
+    assert int(b["tokens"].max()) < 97
