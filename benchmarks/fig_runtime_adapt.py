@@ -1,0 +1,78 @@
+"""Runtime adaptivity benchmark: throughput before / during / after churn.
+
+An 8-device heterogeneous Pi cluster (the paper's largest testbed)
+streams frames through the event-driven runtime; mid-run the fastest
+device drops out.  We report windowed throughput for the pre-churn,
+re-plan/migration, and post-recovery phases, the re-plan wall time, and
+the recovery ratio — post-churn throughput relative to what a fresh
+plan on the surviving devices achieves (the acceptance bar is >= 0.8).
+
+Rows: ``runtime_adapt.<model>.<phase>,us_per_frame,throughput_per_min``.
+"""
+
+from __future__ import annotations
+
+from .common import csv_row
+from repro.core import Cluster, make_pi_cluster, plan
+from repro.models.cnn import zoo
+from repro.runtime import DeviceLeave, PipelineRuntime
+
+FRAMES = 240
+DROP_AFTER = 80          # frames before the strongest device leaves
+
+
+def eight_device_cluster() -> Cluster:
+    """8 heterogeneous Pis: 2x1.5, 2x1.2, 2x1.0, 2x0.8 GHz."""
+    return make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
+
+
+def run(models=("vgg16", "squeezenet"), frames: int = FRAMES) -> list[str]:
+    rows = []
+    builders = {
+        "vgg16": lambda: zoo.vgg16(input_size=(224, 224), scale=0.25),
+        "squeezenet": lambda: zoo.squeezenet(input_size=(224, 224),
+                                             scale=0.5),
+    }
+    for name in models:
+        m = builders[name]()
+        cluster = eight_device_cluster()
+        pico = plan(m.graph, cluster, m.input_size)
+        drop_dev = max(cluster.devices, key=lambda d: d.capacity)
+        drop_t = pico.period * DROP_AFTER
+        rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                             churn=[DeviceLeave(drop_t, drop_dev.name)])
+        rep = rt.run(frames)
+
+        # phase windows: pre-churn, churn+migration, steady post-recovery
+        mig_end = max((r.time + r.migration_s for r in rep.replans),
+                      default=drop_t)
+        pre = rep.windowed_throughput(0.0, drop_t)
+        during = rep.windowed_throughput(drop_t, mig_end)
+        post = rep.windowed_throughput(mig_end, rep.makespan)
+
+        # reference: fresh plan on the surviving 7 devices
+        survivors = Cluster([d for d in cluster.devices
+                             if d.name != drop_dev.name],
+                            bandwidth=cluster.bandwidth)
+        ref = plan(m.graph, survivors, m.input_size)
+        ref_tput = 1.0 / ref.period
+        recovery = post / ref_tput if ref_tput > 0 else 0.0
+
+        for phase, tput in (("pre", pre), ("during", during),
+                            ("post", post)):
+            us = 1e6 / tput if tput > 0 else float("inf")
+            rows.append(csv_row(f"runtime_adapt.{name}.{phase}", us,
+                                f"{tput * 60.0:.1f}"))
+        # recovery vs the best any plan can do on the survivors, and vs
+        # the pre-churn throughput (the acceptance bar: >= 0.8 of pre)
+        rows.append(csv_row(f"runtime_adapt.{name}.recovery",
+                            sum(r.wall_s for r in rep.replans) * 1e6,
+                            f"{recovery:.3f}"))
+        rows.append(csv_row(f"runtime_adapt.{name}.recovery_vs_pre",
+                            sum(r.migration_s for r in rep.replans) * 1e6,
+                            f"{post / pre if pre > 0 else 0.0:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ CSV rows (one per measurement), mirroring the paper's tables/figures:
   table5   heterogeneous utilization/redundancy/mem   (paper Table 5)
   fig15    memory + energy vs devices                 (paper Figs. 15-16)
   table67  PICO vs BFS-optimal                        (paper Tables 6-7)
+  runtime  event-runtime churn adaptivity             (new subsystem)
 
 Use --fast to trim the slowest sweeps (full mode is the default for
 ``python -m benchmarks.run``).
@@ -27,7 +28,7 @@ def main() -> None:
 
     from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
                    fig13_throughput, table5_hetero, fig15_memory,
-                   table67_optimal)
+                   table67_optimal, fig_runtime_adapt)
     benches = {
         "table4": lambda: table4_partition.run(),
         "fig5": lambda: fig5_redundancy.run(),
@@ -37,6 +38,9 @@ def main() -> None:
         "table5": lambda: table5_hetero.run(),
         "fig15": lambda: fig15_memory.run(),
         "table67": lambda: table67_optimal.run(fast=args.fast),
+        "runtime": lambda: fig_runtime_adapt.run(
+            models=("squeezenet",) if args.fast else ("vgg16", "squeezenet"),
+            frames=120 if args.fast else fig_runtime_adapt.FRAMES),
     }
     only = args.only.split(",") if args.only else list(benches)
     t0 = time.time()

@@ -1,0 +1,49 @@
+"""Version shims for the moving jax API surface.
+
+``shard_map``: top-level export with ``check_vma`` on jax >= 0.6;
+``jax.experimental.shard_map`` with ``check_rep`` before that.  Call
+sites use the modern spelling and this wrapper translates.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map_impl
+    _NO_CHECK_KW = {"check_vma": False}
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _NO_CHECK_KW = {"check_rep": False}
+
+
+def _ambient_mesh():
+    """The mesh of the enclosing ``with mesh:`` context (old-jax only,
+    where shard_map has no mesh-optional form)."""
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def shard_map(f, *, in_specs, out_specs, mesh=None, check_vma=True):
+    kw = {} if check_vma else dict(_NO_CHECK_KW)
+    if mesh is None and "check_rep" in _NO_CHECK_KW:
+        mesh = _ambient_mesh()
+        if mesh is None:
+            raise ValueError("shard_map on this jax version needs an "
+                             "explicit mesh= or an enclosing `with mesh:`")
+    if mesh is not None:
+        kw["mesh"] = mesh
+    return _shard_map_impl(f, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context where it exists; on older jax the plain
+    ``with mesh:`` context (which callers already hold) is sufficient,
+    so this degrades to a no-op context manager."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return contextlib.nullcontext(mesh)

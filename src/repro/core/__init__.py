@@ -9,7 +9,7 @@ from .partition import (Piece, PartitionResult, partition_graph,
                         block_pieces)
 from .pipeline_dp import PipelineDP, PipelinePlan, StagePlan, plan_pipeline
 from .hetero import adjust_stages
-from .planner import PicoPlan, plan
+from .planner import PicoPlan, plan, replan, recost
 from .simulate import simulate, SimReport, DeviceReport
 from . import baselines
 
@@ -21,6 +21,7 @@ __all__ = [
     "Piece", "PartitionResult", "partition_graph", "partition_graph_dnc",
     "piece_redundancy", "chain_pieces", "block_pieces",
     "PipelineDP", "PipelinePlan", "StagePlan", "plan_pipeline",
-    "adjust_stages", "PicoPlan", "plan", "simulate", "SimReport",
+    "adjust_stages", "PicoPlan", "plan", "replan", "recost", "simulate",
+    "SimReport",
     "DeviceReport", "baselines",
 ]

@@ -12,10 +12,10 @@ from dataclasses import dataclass
 from typing import Sequence
 
 from .graph import Graph
-from .cost import Cluster
+from .cost import Cluster, stage_cost
 from .partition import (Piece, PartitionResult, partition_graph,
                         partition_graph_dnc)
-from .pipeline_dp import PipelineDP, PipelinePlan
+from .pipeline_dp import PipelineDP, PipelinePlan, StagePlan
 from .hetero import adjust_stages
 
 
@@ -68,3 +68,48 @@ def plan(
     homo_plan = dp.build()
     final = adjust_stages(homo_plan, cluster, g, input_size)
     return PicoPlan(part, final)
+
+
+def replan(
+    g: Graph,
+    cluster: Cluster,
+    input_size: tuple[int, int],
+    prev: PicoPlan,
+    t_lim: float = float("inf"),
+) -> PicoPlan:
+    """Incremental re-plan after a cluster change (runtime feedback loop).
+
+    Algorithm 1's piece chain depends only on the graph, so it is reused
+    from ``prev`` verbatim; only the device-dependent steps re-run
+    (Algorithm 2's DP over the homogenized cluster + Algorithm 3's
+    heterogeneous adjustment).  ``cluster`` is expected to carry
+    *measured* costs — e.g. ``Monitor.calibrated_cluster`` scales each
+    device's alpha by its observed/modeled EWMA — so successive re-plans
+    optimize against the cluster as it behaves, not as it was specced.
+    """
+    return plan(g, cluster, input_size, t_lim, pieces=prev.partition.pieces)
+
+
+def recost(
+    pipeline: PipelinePlan,
+    cluster: Cluster,
+    g: Graph,
+    input_size: tuple[int, int],
+) -> PipelinePlan:
+    """Re-price an existing plan under new device costs, keeping the
+    stage -> device assignment.  Lets a re-planner compare the incumbent
+    plan against a fresh one on equal (measured) footing — the DP must
+    use every device, so e.g. after a DeviceJoin the fresh plan can
+    legitimately lose to the incumbent."""
+    full = g.forward_sizes(input_size)
+    by_name = {d.name: d for d in cluster.devices}
+    stages = []
+    for st in pipeline.stages:
+        devs = [by_name.get(d.name, d) for d in st.devices]
+        sc = stage_cost(g, st.nodes, full, input_size, devs, cluster,
+                        list(st.fractions))
+        stages.append(StagePlan(st.first_piece, st.last_piece, devs,
+                                st.nodes, sc, list(st.fractions)))
+    period = max(s.cost.total for s in stages)
+    latency = sum(s.cost.total for s in stages)
+    return PipelinePlan(stages, period, latency, pipeline.wall_time_s)

@@ -6,13 +6,24 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-portable ``jax.make_mesh`` with Auto axis types.
+
+    jax >= 0.6 takes ``axis_types``; older releases have neither the
+    kwarg nor ``jax.sharding.AxisType`` (Auto is the only behavior).
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading pod=2 axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_devices: int | None = None, axes=("data", "model")):
@@ -23,8 +34,7 @@ def make_test_mesh(n_devices: int | None = None, axes=("data", "model")):
         a *= 2
         n //= 2
     shape = (a, (n_devices or len(jax.devices())) // a)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

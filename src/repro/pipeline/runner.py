@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 from ..core.pipeline_dp import PipelinePlan
 from ..models.cnn.builder import CNNDef

@@ -1,0 +1,540 @@
+"""Event-driven heterogeneous-cluster runtime for PICO pipelines.
+
+The closed-form simulator (``core.simulate``) answers "what *should*
+this plan do"; this executor answers "what does it do when devices are
+actors with their own clocks, queues and memory, transfers take time on
+lossy links, and the cluster changes mid-run".  One virtual timeline
+drives everything (``events.EventQueue``), so runs are deterministic
+and seedable.
+
+Execution semantics per stage ``s`` and frame ``f`` (matching the
+pipeline recurrence of Eq. 12 when links are ideal and devices honest):
+
+* ``FRAME_ARRIVAL``   — f's input is available at s;
+* compute phase       — every member device runs its tile; the phase
+                        lasts max_k of the devices' *true* times
+                        (nominal cost / DVFS speed * noise);
+* comm phase          — intra-stage scatter/gather (the plan's T_comm,
+                        scaled by link degradation) plus the
+                        inter-stage hand-off timed by ``LinkModel``;
+* ``STAGE_DONE``      — the stage frees and f arrives at s+1.
+
+The monitor records observed-vs-nominal time per device; churn events
+(join/leave/DVFS/link) and monitor drift trigger ``core.planner.replan``
+on the measured-calibrated cluster at a frame boundary: in-flight
+frames drain, re-assigned stages pay a parameter-migration transfer,
+then frames resume at the stage covering their next unfinished piece.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from ..core.cost import Cluster
+from ..core.pipeline_dp import StagePlan
+from ..core.planner import PicoPlan, plan as plan_full, recost, replan
+from ..core.graph import Graph
+from .actors import ActorPool
+from .churn import (ChurnEvent, DeviceJoin, DeviceLeave, FreqScale,
+                    LinkDegrade)
+from .events import EventKind, EventQueue, Event
+from .links import LinkMap, LinkModel
+from .monitor import Monitor
+
+
+@dataclass
+class RuntimeConfig:
+    """Knobs for the virtual cluster.  The default is *ideal* — no
+    jitter, no noise, free inter-stage hand-off — and reproduces
+    ``core.simulate`` exactly; turn knobs up for realism."""
+
+    seed: int = 0
+    compute_noise: float = 0.0          # max +/- fraction on true times
+    inter_stage_bandwidth: float | None = None  # None = free hand-off
+    link_latency_s: float = 0.0
+    link_jitter_s: float = 0.0
+    mem_budget_bytes: float = float("inf")
+    replan_on_churn: bool = True
+    replan_on_drift: bool = True
+    drift_threshold: float = 0.25
+    drift_cooldown: int = 24        # monitor samples between drift re-plans
+    ewma_beta: float = 0.3
+    migration_bandwidth: float | None = None    # None = cluster bandwidth
+    trace: bool = False
+
+    @classmethod
+    def ideal(cls, seed: int = 0) -> "RuntimeConfig":
+        return cls(seed=seed)
+
+
+@dataclass
+class Frame:
+    fid: int
+    arrival: float
+    next_piece: int = 0
+    done: float | None = None
+    restarts: int = 0
+    image: object = None                # real-compute input tensor
+    produced: dict = field(default_factory=dict)
+
+
+@dataclass
+class ReplanRecord:
+    time: float
+    reason: str
+    wall_s: float
+    old_period: float
+    new_period: float
+    n_devices: int
+    migration_bytes: float
+    migration_s: float
+
+
+@dataclass
+class RuntimeDeviceReport:
+    device: str
+    utilization: float
+    busy_s: float
+    frames: int
+    memory_peak_bytes: float
+    mem_violations: int
+    energy_j: float
+
+
+@dataclass
+class RuntimeReport:
+    frames: int
+    completed: int
+    period: float
+    latency_first: float
+    latency_mean: float
+    makespan: float
+    throughput_per_min: float
+    devices: list[RuntimeDeviceReport]
+    replans: list[ReplanRecord]
+    completions: list[tuple[int, float, float]]   # (fid, arrival, done)
+    restarts: int = 0
+    outputs: dict[int, dict] = field(default_factory=dict)
+    trace: list[tuple] = field(default_factory=list)
+
+    @property
+    def avg_utilization(self) -> float:
+        live = [d for d in self.devices if d.frames > 0]
+        return sum(d.utilization for d in live) / len(live) if live else 0.0
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(d.energy_j for d in self.devices)
+
+    def windowed_throughput(self, t0: float, t1: float) -> float:
+        """Completed frames/s inside virtual-time window [t0, t1).
+
+        The window closes at t1 when t1 reaches the makespan — the last
+        frame completes exactly at the makespan and must count.
+        """
+        hi_closed = t1 >= self.makespan
+        n = sum(1 for _, _, d in self.completions
+                if t0 <= d and (d < t1 or (hi_closed and d <= t1)))
+        return n / (t1 - t0) if t1 > t0 else 0.0
+
+
+@dataclass
+class _StageState:
+    plan: StagePlan
+    index: int
+    executor: object = None             # StageExecutor in real-compute mode
+    queue: deque = field(default_factory=deque)
+    active: Frame | None = None
+    pending: Event | None = None
+
+
+class PipelineRuntime:
+    def __init__(
+        self,
+        g: Graph | None = None,
+        cluster: Cluster | None = None,
+        input_size: tuple[int, int] | None = None,
+        pico: PicoPlan | None = None,
+        config: RuntimeConfig | None = None,
+        churn: Sequence[ChurnEvent] = (),
+        model=None,                     # CNNDef: real JAX compute per stage
+        params=None,
+        t_lim: float = float("inf"),
+    ):
+        if model is not None:
+            g = model.graph
+            input_size = model.input_size
+        if g is None or cluster is None or input_size is None:
+            raise ValueError("need (g, cluster, input_size) or model=")
+        self.g = g
+        self.input_size = input_size
+        self.cluster = cluster
+        self.t_lim = t_lim
+        self.model = model
+        self.params = params
+        self.config = config or RuntimeConfig()
+        self.rng = np.random.default_rng(self.config.seed)
+        self.pico = pico or plan_full(g, cluster, input_size, t_lim)
+        self.monitor = Monitor(beta=self.config.ewma_beta,
+                               drift_threshold=self.config.drift_threshold)
+        self.pool = ActorPool(cluster.devices,
+                              mem_budget_bytes=self.config.mem_budget_bytes)
+        self.links = LinkMap(LinkModel(
+            bandwidth=self.config.inter_stage_bandwidth,
+            latency_s=self.config.link_latency_s,
+            jitter_s=self.config.link_jitter_s))
+        self.churn = sorted(churn, key=lambda c: c.time)
+        self.replans: list[ReplanRecord] = []
+        self._trace: list[tuple] = []
+        # alpha ratios the current plan was built with (drift baseline)
+        self._plan_ratios: dict[str, float] = {}
+        self._samples_at_replan = 0
+        self._build_stages()
+
+    # ------------------------------------------------------------------
+    # plan -> executable stage states
+    # ------------------------------------------------------------------
+
+    def _build_stages(self) -> None:
+        self.stages = [_StageState(st, i)
+                       for i, st in enumerate(self.pico.pipeline.stages)]
+        if self.model is not None:
+            from ..pipeline.stage import executors_from_plan
+            execs = executors_from_plan(self.model, self.pico.pipeline.stages)
+            for st, ex in zip(self.stages, execs):
+                st.executor = ex
+
+    def _stage_for_piece(self, piece: int) -> int:
+        for st in self.stages:
+            if st.plan.first_piece <= piece <= st.plan.last_piece:
+                return st.index
+        return len(self.stages) - 1
+
+    # ------------------------------------------------------------------
+    # run loop
+    # ------------------------------------------------------------------
+
+    def run(self, n_frames: int = 64, inputs: Sequence | None = None,
+            interarrival: float = 0.0,
+            arrivals: Sequence[float] | None = None) -> RuntimeReport:
+        if inputs is not None:
+            n_frames = len(inputs)
+        if arrivals is not None:
+            n_frames = len(arrivals)
+            if inputs is not None and len(inputs) != n_frames:
+                raise ValueError("len(arrivals) != len(inputs)")
+        if self.model is not None and self.params is None:
+            raise ValueError("real-compute mode needs params")
+        if self.model is not None and inputs is None:
+            raise ValueError("real-compute mode needs inputs=")
+        if getattr(self, "_ran", False):
+            raise RuntimeError("PipelineRuntime is single-use: actor clocks, "
+                               "monitor state and the churn schedule are "
+                               "consumed — build a fresh instance")
+        self._ran = True
+        self.q = EventQueue()
+        self._draining = False
+        self._drain_reason = ""
+        self._deferred_replan: str | None = None
+        self._completed = 0
+        self._n_frames = n_frames
+        self._outputs: dict[int, dict] = {}
+        frames = [Frame(i, arrival=(arrivals[i] if arrivals is not None
+                                    else i * interarrival),
+                        image=None if inputs is None else inputs[i])
+                  for i in range(n_frames)]
+        self._all_frames = frames
+        for fr in frames:
+            self.q.push(fr.arrival, EventKind.FRAME_ARRIVAL,
+                        stage=0, frame=fr)
+        for ce in self.churn:
+            self.q.push(ce.time, EventKind.CHURN, churn=ce)
+        now = 0.0
+        while self._completed < n_frames:
+            ev = self.q.pop()
+            if ev is None:
+                raise RuntimeError(
+                    f"runtime deadlock: {self._completed}/{n_frames} frames "
+                    f"done, draining={self._draining}")
+            now = ev.time
+            self._dispatch(ev)
+        return self._report(now)
+
+    def _dispatch(self, ev: Event) -> None:
+        k = ev.kind
+        if k is EventKind.FRAME_ARRIVAL:
+            self._on_arrival(ev.time, ev.payload["stage"],
+                             ev.payload["frame"])
+        elif k is EventKind.COMPUTE_DONE:
+            self._on_compute_done(ev.time, ev.payload)
+        elif k is EventKind.STAGE_DONE:
+            self._on_stage_done(ev.time, ev.payload)
+        elif k is EventKind.CHURN:
+            self._on_churn(ev.time, ev.payload["churn"])
+        elif k is EventKind.MIGRATION_DONE:
+            self._on_migration_done(ev.time, ev.payload)
+
+    # ------------------------------------------------------------------
+    # handlers
+    # ------------------------------------------------------------------
+
+    def _on_arrival(self, t: float, s: int, frame: Frame) -> None:
+        st = self.stages[s]
+        st.queue.append(frame)
+        for d in st.plan.devices:
+            if d.name in self.pool:
+                self.pool[d.name].enqueue()
+        if self.config.trace:
+            self._trace.append((t, "arrival", s, frame.fid))
+        self._try_start(t, s)
+
+    def _try_start(self, t: float, s: int) -> None:
+        st = self.stages[s]
+        if st.active is not None or not st.queue or self._draining:
+            return
+        frame = st.queue.popleft()
+        st.active = frame
+        seg = st.plan.cost.seg
+        durs, modeled = [], []
+        for k, dev in enumerate(st.plan.devices):
+            act = self.pool[dev.name]
+            nominal = act.device.t_comp(seg.per_device_flops[k])
+            noise = (float(self.rng.uniform(-1.0, 1.0))
+                     * self.config.compute_noise)
+            true_dur = act.compute_time(nominal, noise)
+            mem = seg.param_bytes + seg.feature_bytes[k]
+            act.start_work(t, true_dur, mem)
+            durs.append(true_dur)
+            modeled.append(nominal)
+        dur = max(durs)
+        if st.executor is not None:
+            outs = st.executor(self.params, frame.produced, frame.image)
+            frame.produced.update(outs)
+        st.pending = self.q.push(t + dur, EventKind.COMPUTE_DONE,
+                                 stage=s, frame=frame,
+                                 modeled=modeled, observed=durs)
+        if self.config.trace:
+            self._trace.append((t, "compute", s, frame.fid, dur))
+
+    def _on_compute_done(self, t: float, payload: dict) -> None:
+        s, frame = payload["stage"], payload["frame"]
+        st = self.stages[s]
+        for dev, m, o in zip(st.plan.devices, payload["modeled"],
+                             payload["observed"]):
+            self.monitor.record(s, dev.name, m, o)
+        hop = self.links.hop(s)
+        intra = st.plan.cost.t_comm * hop.degradation
+        inter = hop.transfer_time(sum(st.plan.cost.seg.out_bytes), self.rng)
+        st.pending = self.q.push(t + intra + inter, EventKind.STAGE_DONE,
+                                 stage=s, frame=frame)
+
+    def _on_stage_done(self, t: float, payload: dict) -> None:
+        s, frame = payload["stage"], payload["frame"]
+        st = self.stages[s]
+        st.active = None
+        st.pending = None
+        frame.next_piece = st.plan.last_piece + 1
+        if self.config.trace:
+            self._trace.append((t, "done", s, frame.fid))
+        if s + 1 < len(self.stages):
+            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s + 1, frame=frame)
+        else:
+            frame.done = t
+            self._completed += 1
+            if frame.produced and self.model is not None:
+                sinks = self.model.graph.sinks()
+                self._outputs[frame.fid] = {k: frame.produced[k]
+                                            for k in sinks}
+        if self._draining:
+            if self._all_idle():
+                self._do_replan(t)
+            return
+        if (self.config.replan_on_drift and self.monitor.samples
+                and self._drift_detected()):
+            self._request_replan(t, "drift")
+            return
+        self._try_start(t, s)
+
+    def _drift_detected(self) -> bool:
+        # let the EWMA converge before (re-)acting on it
+        if (self.monitor.samples - self._samples_at_replan
+                < self.config.drift_cooldown):
+            return False
+        # drift is relative to the ratios the current plan was built
+        # with — a device *recovering* to 1.0 after a throttled plan is
+        # drift too, so check every measured device, not just those far
+        # from nominal
+        for name, ew in self.monitor.ratio.items():
+            if not ew.n:
+                continue
+            base = self._plan_ratios.get(name, 1.0)
+            if abs(ew.value / base - 1.0) > self.config.drift_threshold:
+                return True
+        return False
+
+    def _on_churn(self, t: float, ce: ChurnEvent) -> None:
+        if self.config.trace:
+            self._trace.append((t, "churn", type(ce).__name__))
+        if isinstance(ce, LinkDegrade):
+            self.links.degrade(ce.factor, ce.hop)
+            return                       # plan unchanged; costs just grew
+        if isinstance(ce, FreqScale):
+            self.pool[ce.device_name].speed = ce.factor
+            return                       # monitor will notice the drift
+        if isinstance(ce, DeviceJoin):
+            self.pool.add(ce.device,
+                          mem_budget_bytes=self.config.mem_budget_bytes)
+            if self.config.replan_on_churn:
+                self._request_replan(t, "join")
+            return
+        if isinstance(ce, DeviceLeave):
+            self.pool.remove(ce.device_name)
+            self.monitor.reset_device(ce.device_name)
+            # abort any in-flight work that involved the dead device
+            aborted: list[int] = []
+            for st in self.stages:
+                if st.active is not None and any(
+                        d.name == ce.device_name for d in st.plan.devices):
+                    if st.pending is not None:
+                        st.pending.cancelled = True
+                        st.pending = None
+                    st.active.restarts += 1
+                    st.queue.appendleft(st.active)
+                    st.active = None
+                    aborted.append(st.index)
+            if not self.pool.live():
+                raise RuntimeError("all devices left the cluster")
+            if self.config.replan_on_churn:
+                self._request_replan(t, "leave")
+            else:
+                # no re-plan: keep executing the stale plan (the dead
+                # actor's slot still ticks at its modeled rate) — the
+                # aborted frames must restart here or nothing ever will
+                for s_idx in aborted:
+                    self._try_start(t, s_idx)
+
+    # ------------------------------------------------------------------
+    # re-planning
+    # ------------------------------------------------------------------
+
+    def _all_idle(self) -> bool:
+        return all(st.active is None for st in self.stages)
+
+    def _request_replan(self, t: float, reason: str) -> None:
+        if self._draining:
+            # churn landed mid-drain/mid-migration: replay it afterwards
+            self._deferred_replan = self._deferred_replan or reason
+            return
+        self._draining = True
+        self._drain_reason = reason
+        if self._all_idle():
+            self._do_replan(t)
+
+    def _do_replan(self, t: float) -> None:
+        wall0 = _time.perf_counter()
+        alive = self.pool.alive_devices()
+        next_cluster = Cluster(alive, bandwidth=self.cluster.bandwidth,
+                               pair_bandwidth=dict(self.cluster.pair_bandwidth))
+        calibrated = self.monitor.calibrated_cluster(next_cluster)
+        old = self.pico
+        # which devices used to host each piece (for migration cost)
+        old_hosts: dict[int, frozenset[str]] = {}
+        for st in old.pipeline.stages:
+            names = frozenset(d.name for d in st.devices)
+            for p in range(st.first_piece, st.last_piece + 1):
+                old_hosts[p] = names
+        new = replan(self.g, calibrated, self.input_size, prev=old,
+                     t_lim=self.t_lim)
+        # keep the incumbent plan if it is still runnable and wins when
+        # both are priced with measured costs (the DP must use every
+        # device, so a fresh plan can lose — e.g. after a weak join)
+        alive_names = {d.name for d in alive}
+        incumbent_ok = all(d.name in alive_names
+                           for st in old.pipeline.stages for d in st.devices)
+        if incumbent_ok:
+            old_rc = recost(old.pipeline, calibrated, self.g,
+                            self.input_size)
+            if old_rc.period <= new.period:
+                new = PicoPlan(old.partition, old_rc)
+        mig_bytes = 0.0
+        for st in new.pipeline.stages:
+            names = frozenset(d.name for d in st.devices)
+            if old_hosts.get(st.first_piece) != names:
+                mig_bytes += st.cost.seg.param_bytes
+        bw = self.config.migration_bandwidth or self.cluster.bandwidth
+        mig_s = mig_bytes / bw + self.config.link_latency_s
+        wall = _time.perf_counter() - wall0
+        self.replans.append(ReplanRecord(
+            t, self._drain_reason, wall, old.period, new.period,
+            len(alive), mig_bytes, mig_s))
+        self.pico = new
+        self._plan_ratios = {d.name: self.monitor.device_ratio(d.name)
+                             for d in alive}
+        self._samples_at_replan = self.monitor.samples
+        self.q.push(t + mig_s, EventKind.MIGRATION_DONE)
+
+    def _collect_inflight(self) -> list[Frame]:
+        """Harvest queued frames from the old stage states.
+
+        Must run at MIGRATION_DONE time (not at re-plan time): hand-off
+        arrivals scheduled in the same instant as the drain's last
+        STAGE_DONE land in the old queues first.
+        """
+        frames: list[Frame] = []
+        for st in self.stages:
+            frames.extend(st.queue)
+            st.queue.clear()
+        frames.sort(key=lambda f: (f.next_piece == 0, f.fid))
+        return frames
+
+    def _on_migration_done(self, t: float, payload: dict) -> None:
+        inflight = self._collect_inflight()
+        self._build_stages()
+        self._draining = False
+        for frame in inflight:
+            s = self._stage_for_piece(frame.next_piece)
+            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s, frame=frame)
+        if self.config.trace:
+            self._trace.append((t, "migrated", len(inflight)))
+        if self._deferred_replan is not None:
+            reason, self._deferred_replan = self._deferred_replan, None
+            self._request_replan(t, reason)
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def _report(self, now: float) -> RuntimeReport:
+        done = sorted((f.fid, f.arrival, f.done) for f in self._all_frames
+                      if f.done is not None)
+        times = [d for _, _, d in done]
+        makespan = max(times) if times else now
+        if len(times) >= 2:
+            period = (times[-1] - times[0]) / (len(times) - 1)
+        else:
+            period = times[0] if times else 0.0
+        lat = [d - a for _, a, d in done]
+        devs = [RuntimeDeviceReport(
+            a.name, a.utilization(makespan), a.busy_s, a.frames_done,
+            a.mem_peak_bytes, a.mem_violations, a.energy_j(makespan))
+            for a in self.pool.actors.values()]
+        return RuntimeReport(
+            frames=self._n_frames,
+            completed=self._completed,
+            period=period,
+            latency_first=lat[0] if lat else 0.0,
+            latency_mean=sum(lat) / len(lat) if lat else 0.0,
+            makespan=makespan,
+            throughput_per_min=60.0 / period if period > 0 else 0.0,
+            devices=devs,
+            replans=list(self.replans),
+            completions=done,
+            restarts=sum(f.restarts for f in self._all_frames),
+            outputs=self._outputs,
+            trace=list(self._trace),
+        )

@@ -1,6 +1,7 @@
 """Serving: pipelined CNN inference server + LM decode loop."""
 
-from .server import PipelineServer, ServeStats
+from .server import PipelineServer, ServeStats, StreamingPipelineServer
 from .lm import generate
 
-__all__ = ["PipelineServer", "ServeStats", "generate"]
+__all__ = ["PipelineServer", "ServeStats", "StreamingPipelineServer",
+           "generate"]

@@ -1,7 +1,6 @@
 """Unit + property tests for the graph IR and receptive-field math."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import (Graph, LayerSpec, tile_widths,
                               proportional_widths)

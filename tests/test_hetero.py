@@ -1,0 +1,109 @@
+"""Algorithm 3 (`core.hetero.adjust_stages`) on asymmetric clusters."""
+
+import pytest
+
+from repro.core import (Cluster, Device, PipelineDP, make_pi_cluster,
+                        partition_graph, plan, recost, simulate)
+from repro.core.hetero import adjust_stages
+from repro.models.cnn import zoo
+
+
+def _homo_plan(m, cluster):
+    part = partition_graph(m.graph, m.input_size, n_split=len(cluster))
+    dp = PipelineDP(m.graph, part.pieces, cluster.homogenized(),
+                    m.input_size)
+    return dp.build()
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return zoo.squeezenet(input_size=(96, 96), scale=0.1)
+
+
+@pytest.mark.parametrize("freqs", [
+    [2.0, 0.5, 0.5, 0.5],           # one dominant device
+    [1.5, 1.4, 0.3, 0.2],           # two tiers
+    [1.8, 1.0, 1.0, 0.9, 0.4, 0.3],  # six asymmetric devices
+])
+def test_adjust_assigns_every_device_once(small_model, freqs):
+    m = small_model
+    cluster = make_pi_cluster(freqs)
+    adj = adjust_stages(_homo_plan(m, cluster), cluster, m.graph,
+                        m.input_size)
+    names = [d.name for st in adj.stages for d in st.devices]
+    assert sorted(names) == sorted(d.name for d in cluster.devices)
+    # slot counts survive the re-mapping
+    assert sum(st.n_devices for st in adj.stages) == len(cluster)
+
+
+@pytest.mark.parametrize("freqs", [
+    [2.0, 0.5, 0.5, 0.5],
+    [1.5, 1.4, 0.3, 0.2],
+])
+def test_adjust_fractions_proportional_to_capacity(small_model, freqs):
+    m = small_model
+    cluster = make_pi_cluster(freqs)
+    adj = adjust_stages(_homo_plan(m, cluster), cluster, m.graph,
+                        m.input_size)
+    for st in adj.stages:
+        assert abs(sum(st.fractions) - 1.0) < 1e-9
+        total = sum(d.capacity for d in st.devices)
+        for d, f in zip(st.devices, st.fractions):
+            assert f == pytest.approx(d.capacity / total)
+
+
+def test_adjust_strongest_device_gets_hottest_stage(small_model):
+    m = small_model
+    cluster = make_pi_cluster([2.0, 0.5, 0.5, 0.5])
+    homo = _homo_plan(m, cluster)
+    adj = adjust_stages(homo, cluster, m.graph, m.input_size)
+    demand = [sum(st.cost.seg.per_device_flops) / max(st.n_devices, 1)
+              for st in homo.stages]
+    hottest = max(range(len(demand)), key=lambda i: demand[i])
+    fastest = max(cluster.devices, key=lambda d: d.capacity)
+    assert fastest.name in {d.name for d in adj.stages[hottest].devices}
+
+
+def test_adjust_period_latency_consistent(small_model):
+    m = small_model
+    cluster = make_pi_cluster([1.8, 1.0, 1.0, 0.9, 0.4, 0.3])
+    adj = adjust_stages(_homo_plan(m, cluster), cluster, m.graph,
+                        m.input_size)
+    totals = [st.cost.total for st in adj.stages]
+    assert adj.period == pytest.approx(max(totals))
+    assert adj.latency == pytest.approx(sum(totals))
+    # the simulator reproduces the adjusted plan's steady-state period
+    rep = simulate(adj, frames=48)
+    assert rep.period == pytest.approx(adj.period, rel=1e-9)
+
+
+def test_adjust_beats_equal_fractions_on_asymmetric_cluster(small_model):
+    """Capacity-proportional tiling must not lose to a naive equal
+    split of the same stage->device assignment."""
+    m = small_model
+    cluster = make_pi_cluster([2.0, 0.5, 0.5, 0.5])
+    adj = adjust_stages(_homo_plan(m, cluster), cluster, m.graph,
+                        m.input_size)
+    equal = recost(
+        _equalized(adj), cluster, m.graph, m.input_size)
+    assert adj.period <= equal.period + 1e-12
+
+
+def _equalized(plan_):
+    from dataclasses import replace
+    from repro.core.pipeline_dp import PipelinePlan, StagePlan
+    stages = [StagePlan(st.first_piece, st.last_piece, list(st.devices),
+                        st.nodes, st.cost,
+                        [1.0 / st.n_devices] * st.n_devices)
+              for st in plan_.stages]
+    return PipelinePlan(stages, plan_.period, plan_.latency)
+
+
+def test_full_plan_on_asymmetric_cluster_end_to_end(small_model):
+    m = small_model
+    cluster = Cluster([Device("big", 6e9), Device("mid", 2e9),
+                       Device("tiny", 4e8)], bandwidth=50e6 / 8)
+    p = plan(m.graph, cluster, m.input_size)
+    assert p.period > 0 and p.latency >= p.period
+    names = [d.name for st in p.pipeline.stages for d in st.devices]
+    assert sorted(names) == ["big", "mid", "tiny"]

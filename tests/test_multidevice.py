@@ -30,8 +30,8 @@ def test_microbatch_pipeline_exact():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.pipeline.runner import microbatch_pipeline
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("stage",))
         ws = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.1
         xs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 16))
         fn = lambda sid, w, x: jnp.tanh(x @ w)
@@ -76,11 +76,10 @@ def test_sharded_train_step():
         from repro.training.optim import AdamW
         from repro.training.steps import make_train_step
         from repro.launch.sharding import param_pspecs, batch_pspecs
-        from repro.launch.mesh import make_test_mesh
+        from repro.launch.mesh import make_mesh, make_test_mesh
 
         cfg = configs.get("llama3.2-1b").reduced(n_layers=2, d_model=128)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         params = M.init_params(cfg, jax.random.PRNGKey(0))
         opt = AdamW(lr=1e-3)
         state = opt.init(params)
@@ -112,8 +111,8 @@ def test_ring_attention_exact():
         from repro.models.transformer.ring_attention import ring_attention
         from repro.models.transformer.layers import \\
             blockwise_causal_attention
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         for (b, s, k, g, d, w) in [(2, 64, 2, 2, 16, 0),
                                    (1, 128, 1, 4, 32, 0),
                                    (2, 64, 2, 1, 16, 24)]:

@@ -1,0 +1,192 @@
+"""Event-driven runtime: simulator agreement, churn, re-planning.
+
+The tolerance contract: under the ideal config (no jitter, no noise,
+free hand-off) the event executor implements exactly the pipeline
+recurrence of Eq. 12, so measured period/latency/utilization must match
+``core.simulate`` — the tests assert the acceptance bar of 10% but the
+expected error is ~0.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Cluster, Device, make_pi_cluster, plan
+from repro.models.cnn import zoo
+from repro.runtime import (DeviceJoin, DeviceLeave, FreqScale, LinkDegrade,
+                           PipelineRuntime, RuntimeConfig, validate)
+
+CLUSTERS = {
+    "homo4": make_pi_cluster([1.0] * 4),
+    "hetero4": make_pi_cluster([1.5, 1.2, 1.0, 0.8]),
+}
+
+ZOO3 = [
+    ("squeezenet", dict(input_size=(96, 96), scale=0.1)),
+    ("mobilenetv3", dict(input_size=(96, 96), scale=0.25)),
+    ("resnet34", dict(input_size=(96, 96), scale=0.1)),
+]
+
+
+@pytest.mark.parametrize("name,kw", ZOO3)
+@pytest.mark.parametrize("cname", list(CLUSTERS))
+def test_runtime_matches_simulator(name, kw, cname):
+    m = zoo.build(name, **kw)
+    cluster = CLUSTERS[cname]
+    rep = validate(m.graph, cluster, m.input_size, frames=32, tol=0.10)
+    assert rep.ok, str(rep)
+    # ideal config should in fact be near-exact, not just within 10%
+    assert rep.period_rel_err < 1e-6
+    assert rep.latency_rel_err < 1e-6
+    assert rep.utilization_abs_err < 1e-6
+
+
+def _small_model():
+    return zoo.squeezenet(input_size=(96, 96), scale=0.1)
+
+
+def test_device_drop_replans_and_recovers():
+    m = _small_model()
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    pico = plan(m.graph, cluster, m.input_size)
+    drop = max(cluster.devices, key=lambda d: d.capacity)
+    drop_t = pico.period * 20
+    rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         churn=[DeviceLeave(drop_t, drop.name)])
+    rep = rt.run(120)
+    assert rep.completed == 120
+    assert len(rep.replans) >= 1
+    assert rep.replans[0].reason == "leave"
+    assert rep.replans[0].n_devices == 3
+    # post-churn throughput recovers >= 80% of a fresh 3-device plan
+    mig_end = rep.replans[-1].time + rep.replans[-1].migration_s
+    post = rep.windowed_throughput(mig_end, rep.makespan)
+    survivors = Cluster([d for d in cluster.devices if d.name != drop.name],
+                        bandwidth=cluster.bandwidth)
+    ref = plan(m.graph, survivors, m.input_size)
+    assert post >= 0.8 / ref.period
+    # ... and >= 80% of the pre-churn throughput (acceptance criterion),
+    # despite losing the fastest third of the cluster's capacity
+    pre = rep.windowed_throughput(0.0, drop_t)
+    assert post >= 0.8 * pre
+    # the dead device did no work after the drop
+    dead = next(d for d in rep.devices if d.device == drop.name)
+    live_frames = max(d.frames for d in rep.devices)
+    assert dead.frames < live_frames
+
+
+def test_freq_scale_drift_detected_and_calibrated():
+    m = _small_model()
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    pico = plan(m.graph, cluster, m.input_size)
+    victim = pico.pipeline.stages[0].devices[0].name
+    rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         churn=[FreqScale(pico.period * 10, victim, 0.5)])
+    rep = rt.run(120)
+    assert rep.completed == 120
+    assert any(r.reason == "drift" for r in rep.replans)
+    # the monitor measured the 2x slowdown (EWMA converges toward 2.0)
+    assert rt.monitor.device_ratio(victim) > 1.5
+    calibrated = rt.monitor.calibrated_cluster(cluster)
+    cal = next(d for d in calibrated.devices if d.name == victim)
+    orig = next(d for d in cluster.devices if d.name == victim)
+    assert cal.alpha > 1.5 * orig.alpha
+
+
+def test_link_degradation_slows_pipeline():
+    m = _small_model()
+    cluster = make_pi_cluster([1.0] * 4)
+    pico = plan(m.graph, cluster, m.input_size)
+    # realistic WLAN hand-off links: degradation multiplies transfer time
+    cfg = lambda: RuntimeConfig(inter_stage_bandwidth=50e6 / 8)
+    base = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                           config=cfg()).run(48)
+    slow = PipelineRuntime(
+        m.graph, cluster, m.input_size, pico=pico, config=cfg(),
+        churn=[LinkDegrade(0.0, 10.0)]).run(48)
+    assert slow.completed == base.completed == 48
+    assert slow.makespan > base.makespan
+    # and the ideal hand-off is faster than any real link
+    ideal = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico).run(48)
+    assert ideal.makespan < base.makespan
+
+
+def test_device_join_never_hurts():
+    m = _small_model()
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    pico = plan(m.graph, cluster, m.input_size)
+    joiner = Device("pi-extra@0.6GHz", capacity=0.6 * 2e9)
+    rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         churn=[DeviceJoin(pico.period * 20, joiner)])
+    rep = rt.run(120)
+    assert rep.completed == 120
+    assert len(rep.replans) == 1 and rep.replans[0].reason == "join"
+    # the re-planner keeps the incumbent when the fresh plan loses, so
+    # the new modeled period can never exceed the old one
+    assert rep.replans[0].new_period <= rep.replans[0].old_period + 1e-12
+
+
+def test_runtime_real_compute_bit_exact():
+    m = zoo.squeezenet(input_size=(64, 64), scale=0.1)
+    cluster = make_pi_cluster([1.5, 1.0, 0.8])
+    params = m.init(jax.random.PRNGKey(0))
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (1, 64, 64, 3))
+          for i in range(3)]
+    rt = PipelineRuntime(model=m, params=params, cluster=cluster)
+    rep = rt.run(inputs=xs)
+    assert rep.completed == 3
+    for i, x in enumerate(xs):
+        ref = m.forward(params, x)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(rep.outputs[i][k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_runtime_deterministic_under_noise():
+    m = _small_model()
+    cluster = make_pi_cluster([1.2, 1.0, 0.8])
+    pico = plan(m.graph, cluster, m.input_size)
+    cfg = dict(compute_noise=0.1, link_jitter_s=1e-4,
+               inter_stage_bandwidth=50e6 / 8)
+    r1 = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         config=RuntimeConfig(seed=7, **cfg)).run(40)
+    r2 = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         config=RuntimeConfig(seed=7, **cfg)).run(40)
+    r3 = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         config=RuntimeConfig(seed=8, **cfg)).run(40)
+    assert r1.completions == r2.completions
+    assert r1.completions != r3.completions
+    # noise/jitter make the run slower than the noiseless model
+    ideal = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico).run(40)
+    assert r1.makespan > ideal.makespan
+
+
+def test_memory_budget_violations_recorded():
+    m = _small_model()
+    cluster = make_pi_cluster([1.0, 1.0])
+    pico = plan(m.graph, cluster, m.input_size)
+    rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                         config=RuntimeConfig(mem_budget_bytes=1.0))
+    rep = rt.run(8)
+    assert rep.completed == 8
+    assert sum(d.mem_violations for d in rep.devices) > 0
+    assert all(d.memory_peak_bytes > 0 for d in rep.devices if d.frames)
+
+
+def test_streaming_server_end_to_end():
+    from repro.data.pipeline import RequestStream
+    from repro.serving import StreamingPipelineServer
+
+    m = zoo.squeezenet(input_size=(64, 64), scale=0.1)
+    cluster = make_pi_cluster([1.5, 1.0, 0.8])
+    srv = StreamingPipelineServer(m, cluster).load()
+    reqs = RequestStream(rate_per_s=200.0).generate(
+        4, lambda rng, i: jax.random.normal(jax.random.PRNGKey(i),
+                                            (1, 64, 64, 3)))
+    outs, stats = srv.serve(reqs)
+    assert stats.served == 4
+    assert len(stats.per_request) == 4
+    assert all(lat >= 0 for lat in stats.per_request)
+    sinks = m.graph.sinks()
+    assert all(set(o) == set(sinks) for o in outs)

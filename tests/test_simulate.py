@@ -1,8 +1,7 @@
 """Pipeline simulator invariants (paper Eq. 12 quantities), property-
 tested over random stage-time configurations."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import make_pi_cluster, plan, simulate
 from repro.core.cost import SegmentCost, StageCost, Device
