@@ -9,9 +9,11 @@ CSV rows (one per measurement), mirroring the paper's tables/figures:
   fig15    memory + energy vs devices                 (paper Figs. 15-16)
   table67  PICO vs BFS-optimal                        (paper Tables 6-7)
   runtime  event-runtime churn adaptivity             (new subsystem)
+  exec     eager tile loop vs compiled stage path     (repro.exec)
 
 Use --fast to trim the slowest sweeps (full mode is the default for
-``python -m benchmarks.run``).
+``python -m benchmarks.run``).  --smoke runs a tiny-config subset for
+CI: the exec-backend microbenchmark plus the cheapest paper artifacts.
 """
 
 import argparse
@@ -22,13 +24,15 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config CI subset (implies --fast configs)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     args = ap.parse_args()
 
     from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
                    fig13_throughput, table5_hetero, fig15_memory,
-                   table67_optimal, fig_runtime_adapt)
+                   table67_optimal, fig_runtime_adapt, fig_exec_backend)
     benches = {
         "table4": lambda: table4_partition.run(),
         "fig5": lambda: fig5_redundancy.run(),
@@ -41,8 +45,26 @@ def main() -> None:
         "runtime": lambda: fig_runtime_adapt.run(
             models=("squeezenet",) if args.fast else ("vgg16", "squeezenet"),
             frames=120 if args.fast else fig_runtime_adapt.FRAMES),
+        "exec": lambda: fig_exec_backend.run(smoke=args.smoke or args.fast),
     }
+    if args.smoke:
+        # CI smoke: the exec-backend microbenchmark + the cheapest paper
+        # artifacts, all in tiny configs
+        smoke = {
+            "exec": benches["exec"],
+            "table4": benches["table4"],
+            "fig5": benches["fig5"],
+            # >= 2x DROP_AFTER frames so the churn event actually fires
+            "runtime": lambda: fig_runtime_adapt.run(
+                models=("squeezenet",), frames=2 * fig_runtime_adapt.DROP_AFTER),
+        }
+        benches = smoke
     only = args.only.split(",") if args.only else list(benches)
+    unknown = [n for n in only if n not in benches]
+    if unknown:
+        sys.exit(f"unknown benchmark(s) {unknown}; available"
+                 f"{' in --smoke mode' if args.smoke else ''}: "
+                 f"{sorted(benches)}")
     t0 = time.time()
     n = 0
     print("name,us_per_call,derived")

@@ -1,9 +1,10 @@
 """PICO core: graph IR, cost model, and the paper's three algorithms."""
 
 from .graph import Graph, LayerSpec, tile_widths, proportional_widths
-from .cost import (Device, Cluster, SegmentCost, StageCost, segment_cost,
-                   stage_cost, make_pi_cluster, make_tpu_cluster,
-                   TPU_PEAK_FLOPS, TPU_HBM_BW, TPU_ICI_BW, BYTES_PER_ELEM)
+from .cost import (Device, Cluster, CostTable, SegmentCost, StageCost,
+                   segment_cost, stage_cost, make_pi_cluster,
+                   make_tpu_cluster, TPU_PEAK_FLOPS, TPU_HBM_BW, TPU_ICI_BW,
+                   BYTES_PER_ELEM)
 from .partition import (Piece, PartitionResult, partition_graph,
                         partition_graph_dnc, piece_redundancy, chain_pieces,
                         block_pieces)
@@ -15,7 +16,8 @@ from . import baselines
 
 __all__ = [
     "Graph", "LayerSpec", "tile_widths", "proportional_widths",
-    "Device", "Cluster", "SegmentCost", "StageCost", "segment_cost",
+    "Device", "Cluster", "CostTable", "SegmentCost", "StageCost",
+    "segment_cost",
     "stage_cost", "make_pi_cluster", "make_tpu_cluster",
     "TPU_PEAK_FLOPS", "TPU_HBM_BW", "TPU_ICI_BW", "BYTES_PER_ELEM",
     "Piece", "PartitionResult", "partition_graph", "partition_graph_dnc",

@@ -96,6 +96,39 @@ def make_tpu_cluster(n_chips: int, ici_bw: float = TPU_ICI_BW) -> Cluster:
 
 
 # ---------------------------------------------------------------------------
+# Measured cost corrections
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CostTable:
+    """Measured per-segment compute-cost corrections.
+
+    ``ratios[nodes]`` is observed/analytic seconds for the fused segment
+    ``nodes``, as timed by ``exec.calibrate`` on its *compiled*
+    executable.  ``stage_cost`` multiplies each device's analytic
+    compute time by the segment's ratio, replacing the purely analytic
+    alpha with measured numbers.  Segments never calibrated fall back to
+    ``default`` (typically the mean measured ratio), or 1.0.
+    """
+
+    ratios: dict[frozenset[str], float] = field(default_factory=dict)
+    default: float | None = None
+
+    def ratio(self, nodes) -> float:
+        r = self.ratios.get(frozenset(nodes))
+        if r is not None:
+            return r
+        if self.default is not None:
+            return self.default
+        if self.ratios:
+            return sum(self.ratios.values()) / len(self.ratios)
+        return 1.0
+
+    def __len__(self) -> int:
+        return len(self.ratios)
+
+
+# ---------------------------------------------------------------------------
 # Segment / stage costing
 # ---------------------------------------------------------------------------
 
@@ -259,18 +292,22 @@ def stage_cost(
     devices: Sequence[Device],
     cluster: Cluster,
     fractions: Sequence[float] | None = None,
+    cost_table: CostTable | None = None,
 ) -> StageCost:
     """Cost a stage: ``devices`` tile-split the segment's output.
 
     If ``fractions`` is None, widths are proportional to capacities
     (Algorithm 3's divide-and-conquer rebalancing; equal for homogeneous
-    devices, reproducing Algorithm 2's equal split).
+    devices, reproducing Algorithm 2's equal split).  ``cost_table``
+    scales the analytic compute times by the segment's measured ratio
+    (see :class:`CostTable`).
     """
     if fractions is None:
         total = sum(d.capacity for d in devices)
         fractions = [d.capacity / total for d in devices]
     seg = segment_cost(g, nodes, full_sizes, input_size, fractions)
-    comp = [d.t_comp(f) for d, f in zip(devices, seg.per_device_flops)]
+    ratio = cost_table.ratio(nodes) if cost_table is not None else 1.0
+    comp = [d.t_comp(f) * ratio for d, f in zip(devices, seg.per_device_flops)]
     t_comp = max(comp)
     # d_f = the first device distributes/gathers (Eq. 9-10)
     d_f = devices[0]

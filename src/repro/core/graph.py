@@ -353,11 +353,22 @@ def tile_widths(total: int, parts: int) -> list[int]:
 def proportional_widths(total: int, weights: Sequence[float]) -> list[int]:
     """Split ``total`` proportionally to ``weights``.
 
-    Parts are >= 1 when total >= len(weights); otherwise the ``total``
+    Weights <= 0 get width 0 (the device sits the stage out — an empty
+    tile, not a 1-column sliver).  Among the positive weights, parts are
+    >= 1 when total >= their count; otherwise the ``total``
     largest-weight parts get 1 and the rest 0 (a feature narrower than
     the device group: surplus devices idle, as in the paper's CE note).
     """
     assert len(weights) > 0
+    pos = [i for i, w in enumerate(weights) if w > 0]
+    if not pos:
+        raise ValueError("proportional_widths: all weights are <= 0")
+    if len(pos) < len(weights):
+        inner = proportional_widths(total, [weights[i] for i in pos])
+        out = [0] * len(weights)
+        for i, w in zip(pos, inner):
+            out[i] = w
+        return out
     if total < len(weights):
         order = sorted(range(len(weights)), key=lambda i: -weights[i])
         out = [0] * len(weights)

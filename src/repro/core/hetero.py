@@ -13,7 +13,7 @@ import time
 from dataclasses import replace
 from typing import Sequence
 
-from .cost import Cluster, Device, stage_cost
+from .cost import Cluster, CostTable, Device, stage_cost
 from .pipeline_dp import PipelinePlan, StagePlan
 
 
@@ -22,6 +22,7 @@ def adjust_stages(
     cluster: Cluster,
     g,
     input_size: tuple[int, int],
+    cost_table: CostTable | None = None,
 ) -> PipelinePlan:
     """Algorithm 3.  ``plan`` comes from PipelineDP on cluster.homogenized()."""
     t0 = time.perf_counter()
@@ -45,11 +46,22 @@ def adjust_stages(
     stages: list[StagePlan] = []
     period = 0.0
     latency = 0.0
-    for st, devs in zip(plan.stages, assigned):
-        devs = devs or list(st.devices)  # safety: keep placeholder devices
+    for si, (st, devs) in enumerate(zip(plan.stages, assigned)):
+        if not devs:
+            # The seed silently fell back to the homogenized *placeholder*
+            # devices here, leaking fictitious "avgN" devices into the
+            # final plan whenever the cluster had fewer devices than the
+            # plan had slots.  That plan is unexecutable — fail loudly;
+            # callers must re-plan on the cluster they actually have.
+            raise ValueError(
+                f"adjust_stages: stage {si} received no devices — the plan "
+                f"needs {sum(s.n_devices for s in plan.stages)} device slots "
+                f"but the cluster has {len(cluster.devices)}; re-plan on the "
+                "current cluster instead of adjusting a stale pipeline")
         total = sum(d.capacity for d in devs)
         fracs = [d.capacity / total for d in devs]
-        sc = stage_cost(g, st.nodes, full, input_size, devs, cluster, fracs)
+        sc = stage_cost(g, st.nodes, full, input_size, devs, cluster, fracs,
+                        cost_table=cost_table)
         stages.append(StagePlan(st.first_piece, st.last_piece, devs,
                                 st.nodes, sc, fracs))
         period = max(period, sc.total)

@@ -19,7 +19,7 @@ from functools import lru_cache
 from typing import Mapping, Sequence
 
 from .graph import Graph
-from .cost import Cluster, Device, StageCost, stage_cost
+from .cost import Cluster, CostTable, Device, StageCost, stage_cost
 from .partition import Piece
 
 
@@ -67,12 +67,14 @@ class PipelineDP:
         cluster: Cluster,
         input_size: tuple[int, int],
         t_lim: float = float("inf"),
+        cost_table: CostTable | None = None,
     ):
         self.g = g
         self.pieces = list(pieces)
         self.cluster = cluster
         self.input_size = input_size
         self.t_lim = t_lim
+        self.cost_table = cost_table
         self.full = g.forward_sizes(input_size)
         self._stage_cache: dict[tuple[int, int, int], StageCost] = {}
         # memo[(i, j, p)] = (period, latency, split) where split is either
@@ -87,7 +89,8 @@ class PipelineDP:
             nodes = frozenset().union(*(p.nodes for p in self.pieces[i:j + 1]))
             devs = self.cluster.devices[:m]
             hit = stage_cost(self.g, nodes, self.full, self.input_size,
-                             devs, self.cluster, [1.0 / m] * m)
+                             devs, self.cluster, [1.0 / m] * m,
+                             cost_table=self.cost_table)
             self._stage_cache[key] = hit
         return hit
 
@@ -129,7 +132,8 @@ class PipelineDP:
             # T_lim infeasible: fall back to the unconstrained optimum
             # and flag it (paper: the limit is a soft preference)
             fallback = PipelineDP(self.g, self.pieces, self.cluster,
-                                  self.input_size).build()
+                                  self.input_size,
+                                  cost_table=self.cost_table).build()
             fallback.feasible = False
             fallback.wall_time_s += time.perf_counter() - t0
             return fallback
@@ -166,5 +170,7 @@ def plan_pipeline(
     cluster: Cluster,
     input_size: tuple[int, int],
     t_lim: float = float("inf"),
+    cost_table: CostTable | None = None,
 ) -> PipelinePlan:
-    return PipelineDP(g, pieces, cluster, input_size, t_lim).build()
+    return PipelineDP(g, pieces, cluster, input_size, t_lim,
+                      cost_table=cost_table).build()

@@ -12,7 +12,7 @@ from dataclasses import dataclass
 from typing import Sequence
 
 from .graph import Graph
-from .cost import Cluster, stage_cost
+from .cost import Cluster, CostTable, stage_cost
 from .partition import (Piece, PartitionResult, partition_graph,
                         partition_graph_dnc)
 from .pipeline_dp import PipelineDP, PipelinePlan, StagePlan
@@ -46,12 +46,15 @@ def plan(
     n_split: int | None = None,
     dnc_threshold: int = 120,
     pieces: Sequence[Piece] | None = None,
+    cost_table: CostTable | None = None,
 ) -> PicoPlan:
     """Run the full PICO optimization.
 
     ``n_split`` (reference tiling for C(M)) defaults to the cluster size.
     Graphs wider/longer than ``dnc_threshold`` vertices use the
-    divide-and-conquer driver.
+    divide-and-conquer driver.  ``cost_table`` (from
+    ``exec.calibrate``) substitutes measured per-segment compute costs
+    for the analytic alpha model in every stage costing.
     """
     n_split = n_split or max(2, len(cluster))
     if pieces is None:
@@ -64,9 +67,11 @@ def plan(
                                0, 0.0)
 
     homo = cluster.homogenized()
-    dp = PipelineDP(g, part.pieces, homo, input_size, t_lim)
+    dp = PipelineDP(g, part.pieces, homo, input_size, t_lim,
+                    cost_table=cost_table)
     homo_plan = dp.build()
-    final = adjust_stages(homo_plan, cluster, g, input_size)
+    final = adjust_stages(homo_plan, cluster, g, input_size,
+                          cost_table=cost_table)
     return PicoPlan(part, final)
 
 
@@ -76,6 +81,7 @@ def replan(
     input_size: tuple[int, int],
     prev: PicoPlan,
     t_lim: float = float("inf"),
+    cost_table: CostTable | None = None,
 ) -> PicoPlan:
     """Incremental re-plan after a cluster change (runtime feedback loop).
 
@@ -87,7 +93,8 @@ def replan(
     device's alpha by its observed/modeled EWMA — so successive re-plans
     optimize against the cluster as it behaves, not as it was specced.
     """
-    return plan(g, cluster, input_size, t_lim, pieces=prev.partition.pieces)
+    return plan(g, cluster, input_size, t_lim, pieces=prev.partition.pieces,
+                cost_table=cost_table)
 
 
 def recost(
@@ -95,6 +102,7 @@ def recost(
     cluster: Cluster,
     g: Graph,
     input_size: tuple[int, int],
+    cost_table: CostTable | None = None,
 ) -> PipelinePlan:
     """Re-price an existing plan under new device costs, keeping the
     stage -> device assignment.  Lets a re-planner compare the incumbent
@@ -107,7 +115,7 @@ def recost(
     for st in pipeline.stages:
         devs = [by_name.get(d.name, d) for d in st.devices]
         sc = stage_cost(g, st.nodes, full, input_size, devs, cluster,
-                        list(st.fractions))
+                        list(st.fractions), cost_table=cost_table)
         stages.append(StagePlan(st.first_piece, st.last_piece, devs,
                                 st.nodes, sc, list(st.fractions)))
     period = max(s.cost.total for s in stages)

@@ -1,0 +1,32 @@
+"""Compiled per-stage execution backend with calibrated costs.
+
+The execution layer between the planner's :class:`StagePlan` and JAX:
+
+* :mod:`~repro.exec.backends` — pluggable conv backends (``xla``,
+  ``pallas``) selected per model/executor, no mutable module global;
+* :mod:`~repro.exec.compiler` — lowers one stage's fused segment (all
+  device tiles) into a single jitted callable, with optional buffer
+  donation and ``lax.scan`` micro-batching over frames;
+* :mod:`~repro.exec.cache` — executable cache keyed on (segment
+  signature, tile shapes, dtype, backend);
+* :mod:`~repro.exec.calibrate` — times compiled stages and feeds a
+  measured :class:`~repro.core.cost.CostTable` back into the planner.
+"""
+
+from .backends import (apply_layer, available_backends, default_interpret,
+                       get_backend, register_backend)
+from .compiler import CompiledStage, compile_stage, segment_signature
+from .cache import (CacheStats, cache_stats, clear_cache, compiled_stage,
+                    set_cache_size, stage_cache_key, static_stage_key)
+from .calibrate import (CalibrationReport, StageCalibration, calibrate_plan,
+                        calibrated_plan, measure_host_flops)
+
+__all__ = [
+    "apply_layer", "available_backends", "default_interpret", "get_backend",
+    "register_backend", "CompiledStage", "compile_stage",
+    "segment_signature", "CacheStats", "cache_stats", "clear_cache",
+    "compiled_stage", "set_cache_size", "stage_cache_key",
+    "static_stage_key",
+    "CalibrationReport", "StageCalibration", "calibrate_plan",
+    "calibrated_plan", "measure_host_flops",
+]

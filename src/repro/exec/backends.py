@@ -1,0 +1,123 @@
+"""Pluggable per-layer execution backends.
+
+A backend is how a *conv* vertex is lowered — everything else (pool,
+fc, connectors) is backend-independent XLA.  Backends are registered in
+a process-wide table but *selected* explicitly: :class:`CNNDef` carries
+a ``backend`` field and the stage executors thread it through, so there
+is no mutable module global deciding the numerics of an already-built
+model (the seed's ``_CONV_BACKEND`` failure mode).
+
+Registered backends:
+
+``xla``
+    ``lax.conv_general_dilated`` — the reference path on every platform.
+``pallas``
+    The repro's implicit-GEMM Pallas kernel (``kernels.conv2d``).
+    ``interpret`` is auto-detected from the JAX platform: on TPU the
+    kernel actually compiles; elsewhere it runs in interpret mode
+    (slow but bit-faithful).  Strided or kernel-unsupported shapes
+    route through :func:`kernels.conv2d.ops.conv2d`'s reference
+    fallback, which warns once per offending shape.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import LayerSpec
+
+# conv backend signature: (spec, params, x, pad_w) -> y  (NHWC, VALID +
+# explicit pad_w/ph padding, no bias, no activation)
+ConvFn = Callable[[LayerSpec, dict, jax.Array, tuple[int, int]], jax.Array]
+
+_REGISTRY: dict[str, ConvFn] = {}
+DEFAULT_BACKEND = "xla"
+
+
+def register_backend(name: str, fn: ConvFn) -> None:
+    _REGISTRY[name] = fn
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str | None) -> ConvFn:
+    name = name or DEFAULT_BACKEND
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown exec backend {name!r}; "
+                         f"registered: {available_backends()}") from None
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: only compile for real on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+def _conv_xla(spec: LayerSpec, p: dict, x: jax.Array,
+              pad_w: tuple[int, int]) -> jax.Array:
+    ph = spec.padding[1]
+    return jax.lax.conv_general_dilated(
+        x, p["w"],
+        window_strides=(spec.stride[1], spec.stride[0]),
+        padding=((ph, ph), pad_w),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _conv_pallas(spec: LayerSpec, p: dict, x: jax.Array,
+                 pad_w: tuple[int, int]) -> jax.Array:
+    from ..kernels.conv2d.ops import conv2d as conv2d_kernel
+    ph = spec.padding[1]
+    xp = jnp.pad(x, ((0, 0), (ph, ph), pad_w, (0, 0)))
+    return conv2d_kernel(xp, p["w"], stride=(spec.stride[1], spec.stride[0]),
+                         interpret=default_interpret())
+
+
+register_backend("xla", _conv_xla)
+register_backend("pallas", _conv_pallas)
+
+
+# ---------------------------------------------------------------------------
+# layer application (backend-dispatching successor of builder._apply)
+# ---------------------------------------------------------------------------
+
+def apply_layer(spec: LayerSpec, p, x: jax.Array, relu: bool,
+                pad_w: tuple[int, int] = (0, 0),
+                backend: str | None = None) -> jax.Array:
+    """Apply one layer to an NHWC tile.
+
+    ``pad_w`` is the tile's share of the layer's zero padding along W
+    (only boundary tiles get any); H is never tiled, so the full
+    (p_h, p_h) padding always applies.  ``backend`` selects the conv
+    lowering; every other kind is plain XLA.
+    """
+    ph = spec.padding[1]
+    if spec.kind == "conv":
+        y = get_backend(backend)(spec, p, x, pad_w) + p["b"]
+        return jax.nn.relu(y) if relu else y
+    if spec.kind == "pool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, spec.kernel[1], spec.kernel[0], 1),
+            window_strides=(1, spec.stride[1], spec.stride[0], 1),
+            padding=((0, 0), (ph, ph), pad_w, (0, 0)),
+        )
+    if spec.kind == "gpool":
+        return jnp.mean(x, axis=(1, 2), keepdims=True)
+    if spec.kind == "fc":
+        flat = x.reshape(x.shape[0], -1)
+        y = flat @ p["w"] + p["b"]
+        return y.reshape(x.shape[0], 1, 1, -1)  # stay NHWC for uniformity
+    if spec.kind in ("identity", "input", "output"):
+        return x
+    raise NotImplementedError(spec.kind)

@@ -1,0 +1,91 @@
+"""Executable cache for compiled stage segments.
+
+Keyed on (segment signature, tile shapes, boundary dtypes, backend) —
+NOT on model object identity — so a re-plan that reproduces the same
+stage structure, or a rebuilt but identical model, reuses the existing
+jitted executable instead of re-tracing.  Bounded LRU: past ``maxsize``
+the least-recently-used entry is dropped.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+from .compiler import CompiledStage, segment_signature
+from ..pipeline.halo import tile_signature
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def entries(self) -> int:
+        return len(_CACHE)
+
+
+_CACHE: "OrderedDict[tuple, CompiledStage]" = OrderedDict()
+_STATS = CacheStats()
+_MAXSIZE = 256
+
+
+def cache_stats() -> CacheStats:
+    return _STATS
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS.hits = _STATS.misses = _STATS.evictions = 0
+
+
+def set_cache_size(n: int) -> None:
+    global _MAXSIZE
+    _MAXSIZE = max(1, int(n))
+    while len(_CACHE) > _MAXSIZE:
+        _CACHE.popitem(last=False)
+        _STATS.evictions += 1
+
+
+def static_stage_key(model, nodes, plans, needs) -> tuple:
+    """The per-call-invariant part of a stage's cache key.  Callers on a
+    hot path (StageExecutor) compute this once and pass it back via
+    ``static_key=`` so the signature sort is not re-done per frame."""
+    return (segment_signature(model.graph, nodes, model.input_size),
+            tile_signature(plans), tuple(needs))
+
+
+def stage_cache_key(model, nodes, plans, needs, *, backend, relu, donate,
+                    boundary: Mapping, static_key: tuple | None = None
+                    ) -> tuple:
+    shapes = tuple((k, tuple(boundary[k].shape), str(boundary[k].dtype))
+                   for k in needs)
+    if static_key is None:
+        static_key = static_stage_key(model, nodes, plans, needs)
+    return (*static_key, backend, relu, bool(donate), shapes)
+
+
+def compiled_stage(model, nodes, plans, needs: Sequence, sinks: Sequence,
+                   *, backend: str | None, relu: bool, donate: bool,
+                   boundary: Mapping, static_key: tuple | None = None
+                   ) -> CompiledStage:
+    """Fetch-or-build the executable for one stage + boundary shapes."""
+    key = stage_cache_key(model, nodes, plans, needs, backend=backend,
+                          relu=relu, donate=donate, boundary=boundary,
+                          static_key=static_key)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS.hits += 1
+        _CACHE.move_to_end(key)
+        return hit
+    _STATS.misses += 1
+    cs = CompiledStage(model, nodes, plans, needs, sinks, backend=backend,
+                       relu=relu, donate=donate)
+    _CACHE[key] = cs
+    while len(_CACHE) > _MAXSIZE:
+        _CACHE.popitem(last=False)
+        _STATS.evictions += 1
+    return cs

@@ -1,0 +1,112 @@
+"""Segment compiler: one StagePlan's fused segment -> one jitted callable.
+
+The seed executed a stage as an eager Python loop — re-interpreting the
+segment DAG per tile, per frame, with one XLA dispatch per layer.  This
+module lowers the *whole* stage — split, every device tile's sub-DAG,
+stitch — into a single ``jax.jit`` callable, so the planner's per-stage
+cost has an executable counterpart that can actually be measured
+(see :mod:`repro.exec.calibrate`).
+
+Two entry points per :class:`CompiledStage`:
+
+* ``__call__(params, boundary)`` — one frame;
+* ``run_frames(params, boundary)`` — a stack of frames with a leading
+  frame axis, micro-batched through ``lax.scan`` so the whole stream is
+  one dispatch with constant memory in the number of frames.
+
+Buffer donation (``donate=True``) hands the boundary buffers to XLA for
+in-place reuse — safe only when the caller will not read them again
+(the scan/benchmark paths own their inputs; the multi-stage runner
+shares ``produced`` tensors across stages, so it keeps donation off).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+
+from ..pipeline.halo import (TilePlan, plan_tiles, split_inputs,
+                             stitch_outputs)
+
+
+def segment_signature(graph, nodes, input_size) -> tuple:
+    """Hashable fingerprint of a fused segment's geometry + weights.
+
+    Two models whose segments agree on this signature lower to the same
+    executable, so cache entries survive re-plans and model rebuilds.
+    """
+    nodes = frozenset(nodes)
+    layers = tuple(sorted(
+        (n, s.kind, s.kernel, s.stride, s.padding, s.in_channels,
+         s.out_channels, s.flops_coeff, s.global_rf)
+        for n, s in ((n, graph.layers[n]) for n in nodes)))
+    edges = tuple(sorted((u, v) for u, v in graph.edges
+                         if u in nodes and v in nodes))
+    return (layers, edges, tuple(input_size))
+
+
+class CompiledStage:
+    """All device tiles of one stage as a single jitted executable."""
+
+    def __init__(self, model, nodes, plans: Sequence[TilePlan],
+                 needs: Sequence[tuple[str, str | None]],
+                 sinks: Sequence[str], *, backend: str | None = None,
+                 relu: bool = True, donate: bool = False):
+        self.model = model
+        self.nodes = frozenset(nodes)
+        self.plans = list(plans)
+        self.needs = list(needs)
+        self.sinks = list(sinks)
+        self.backend = backend
+        self.relu = relu
+        # XLA on CPU cannot alias donated buffers; donation there only
+        # produces warnings, so honor the flag on accelerators only
+        self.donate = bool(donate) and jax.default_backend() != "cpu"
+        dn = tuple(range(1, 1 + len(self.needs))) if self.donate else ()
+        self._fn = jax.jit(self._run, donate_argnums=dn)
+        self._scan_fn = jax.jit(self._run_frames, donate_argnums=dn)
+
+    # traced bodies ------------------------------------------------------
+
+    def _run(self, params, *bufs):
+        boundary = dict(zip(self.needs, bufs))
+        tiles_in = split_inputs(self.plans, self.needs, boundary)
+        tiles_out = []
+        for tp, tin in zip(self.plans, tiles_in):
+            if tp.empty:
+                tiles_out.append({})
+                continue
+            tiles_out.append(self.model.run_segment(
+                params, self.nodes, tin,
+                ranges=(tp.out_ranges, tp.in_ranges),
+                relu=self.relu, backend=self.backend))
+        return stitch_outputs(self.plans, self.sinks, tiles_out)
+
+    def _run_frames(self, params, *bufs):
+        def body(carry, xs):
+            return carry, self._run(params, *xs)
+        _, outs = jax.lax.scan(body, None, bufs)
+        return outs
+
+    # public -------------------------------------------------------------
+
+    def __call__(self, params, boundary: Mapping) -> dict[str, jax.Array]:
+        return self._fn(params, *(boundary[k] for k in self.needs))
+
+    def run_frames(self, params, boundary: Mapping) -> dict[str, jax.Array]:
+        """``boundary`` tensors carry a leading frame axis (F, N, H, W, C);
+        returns sink tensors stacked the same way."""
+        return self._scan_fn(params, *(boundary[k] for k in self.needs))
+
+def compile_stage(model, nodes, fractions: Sequence[float], *,
+                  backend: str | None = None, relu: bool = True,
+                  donate: bool = False) -> CompiledStage:
+    """Convenience: plan tiles for ``fractions`` and compile the stage."""
+    nodes = frozenset(nodes)
+    g = model.graph
+    plans = plan_tiles(g, nodes, model.full_sizes, model.input_size,
+                       list(fractions))
+    return CompiledStage(model, nodes, plans, model.boundary_needs(nodes),
+                         g.sinks(nodes), backend=backend, relu=relu,
+                         donate=donate)

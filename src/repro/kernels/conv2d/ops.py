@@ -1,18 +1,43 @@
 """jit'd public wrapper for the conv2d Pallas kernel with shape guards."""
 
+import warnings
+
 import jax
 
 from .conv2d import conv2d as _conv2d_pallas
 from .ref import conv2d_ref
 
+_warned: set[tuple] = set()
 
-def conv2d(x: jax.Array, w: jax.Array, *, use_pallas: bool = True,
-           interpret: bool = False) -> jax.Array:
-    """Stride-1 VALID NHWC conv.  Falls back to the XLA conv when the
-    shape is unsupported by the kernel (tiny channel counts)."""
+
+def _warn_once(key: tuple, msg: str) -> None:
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: tuple[int, int] = (1, 1),
+           use_pallas: bool = True, interpret: bool = False) -> jax.Array:
+    """VALID NHWC conv.  The Pallas implicit-GEMM kernel handles the
+    stride-1 case; strided or kernel-unsupported shapes fall back to the
+    XLA reference *inside this wrapper* (warning once per shape), so the
+    caller's backend choice is honored for every conv in a segment
+    instead of silently bypassing it.
+    """
     N, H, W, CI = x.shape
     KH, KW, CI2, CO = w.shape
     assert CI == CI2, (x.shape, w.shape)
-    if not use_pallas or H < KH or W < KW:
-        return conv2d_ref(x, w)
+    if not use_pallas:
+        return conv2d_ref(x, w, stride)
+    if stride != (1, 1):
+        _warn_once(("stride", stride, w.shape),
+                   f"conv2d: Pallas kernel is stride-1 only; stride={stride} "
+                   f"conv {w.shape} falls back to the XLA reference")
+        return conv2d_ref(x, w, stride)
+    if H < KH or W < KW:
+        _warn_once(("shape", x.shape, w.shape),
+                   f"conv2d: input {x.shape} smaller than kernel {w.shape}; "
+                   "falling back to the XLA reference")
+        return conv2d_ref(x, w, stride)
     return _conv2d_pallas(x, w, interpret=interpret)

@@ -1,11 +1,11 @@
 """Pure-jnp oracle for the conv2d kernel."""
 
 import jax
-import jax.numpy as jnp
 
 
-def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x: (N, H, W, CI); w: (KH, KW, CI, CO).  Stride-1 VALID conv."""
+def conv2d_ref(x: jax.Array, w: jax.Array,
+               stride: tuple[int, int] = (1, 1)) -> jax.Array:
+    """x: (N, H, W, CI); w: (KH, KW, CI, CO).  VALID conv, (sh, sw) stride."""
     return jax.lax.conv_general_dilated(
-        x, w, window_strides=(1, 1), padding="VALID",
+        x, w, window_strides=stride, padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))

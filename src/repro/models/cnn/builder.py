@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.graph import Graph, LayerSpec
+from ...exec.backends import apply_layer
 
 
 @dataclass
@@ -30,6 +31,8 @@ class CNNDef:
     input_size: tuple[int, int]      # (W, H)
     in_channels: int = 3
     blocks: list[list[str]] = field(default_factory=list)  # block structure
+    backend: str | None = None       # conv lowering (exec.backends); None
+    #                                  = the registry default ("xla")
 
     # ---------------- parameters ----------------
     def init(self, key: jax.Array, dtype=jnp.float32) -> dict[str, dict]:
@@ -92,6 +95,7 @@ class CNNDef:
         ranges: tuple[Mapping[str, tuple[int, int]],
                       Mapping[str, tuple[int, int]]] | None = None,
         relu: bool = True,
+        backend: str | None = None,
     ) -> dict[str, jax.Array]:
         """Execute the sub-DAG ``nodes`` on (halo-extended) width tiles.
 
@@ -103,8 +107,12 @@ class CNNDef:
         represented in the graph as explicit geometry, which is what
         makes tiled execution bit-equal to the monolithic run.
 
+        ``backend`` selects the conv lowering (``exec.backends``); None
+        uses the model's own ``self.backend``.
+
         Returns {sink: tile covering ranges[0][sink] along W}.
         """
+        backend = backend or self.backend
         nodes = set(nodes)
         g = self.graph
         if ranges is None:
@@ -145,67 +153,37 @@ class CNNDef:
             full_in_w = (self.full_sizes[ps[0]] if ps else self.input_size)[0]
             pad_w = g.tile_padding(n, req_out[n], full_in_w) \
                 if spec.kind in ("conv", "pool", "dwconv") else (0, 0)
-            vals[n] = _apply(spec, params.get(n), xs[0], relu, pad_w)
+            vals[n] = apply_layer(spec, params.get(n), xs[0], relu, pad_w,
+                                  backend=backend)
         return {s: vals[s] for s in g.sinks(nodes)}
 
-    def forward(self, params, image: jax.Array, relu: bool = True):
+    def forward(self, params, image: jax.Array, relu: bool = True,
+                backend: str | None = None):
         """Monolithic forward over the whole graph (reference path)."""
         srcs = self.graph.sources()
         outs = self.run_segment(params, set(self.graph.layers),
-                                {(s, None): image for s in srcs}, relu=relu)
+                                {(s, None): image for s in srcs}, relu=relu,
+                                backend=backend)
         return outs
 
 
-# execution backend for conv layers: 'xla' (default) or 'pallas'
-# (the repro's implicit-GEMM TPU kernel; on CPU it runs in interpret
-# mode — slow but bit-faithful, used to prove kernel/system integration)
-_CONV_BACKEND = "xla"
-
-
 def set_conv_backend(name: str):
-    global _CONV_BACKEND
-    assert name in ("xla", "pallas")
-    _CONV_BACKEND = name
+    """Deprecated: set ``CNNDef.backend`` (or pass ``backend=`` to the
+    executors) instead of flipping a process-wide default.
 
-
-def _apply(spec: LayerSpec, p, x: jax.Array, relu: bool,
-           pad_w: tuple[int, int] = (0, 0)) -> jax.Array:
-    """Apply one layer to an NHWC tile.
-
-    ``pad_w`` is the tile's share of the layer's zero padding along W
-    (only boundary tiles get any); H is never tiled, so the full
-    (p_h, p_h) padding always applies.
+    Unlike the seed's module global (read at apply time), this only
+    changes the *default* for executors built afterwards — a
+    StageExecutor resolves its backend once at construction, so
+    already-built executors keep the numerics they were created with.
     """
-    ph = spec.padding[1]
-    if spec.kind == "conv":
-        if _CONV_BACKEND == "pallas" and spec.stride == (1, 1):
-            from ...kernels.conv2d.ops import conv2d as conv2d_kernel
-            xp = jnp.pad(x, ((0, 0), (ph, ph), pad_w, (0, 0)))
-            y = conv2d_kernel(xp, p["w"], interpret=True) + p["b"]
-            return jax.nn.relu(y) if relu else y
-        y = jax.lax.conv_general_dilated(
-            x, p["w"],
-            window_strides=(spec.stride[1], spec.stride[0]),
-            padding=((ph, ph), pad_w),
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        ) + p["b"]
-        return jax.nn.relu(y) if relu else y
-    if spec.kind == "pool":
-        return jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max,
-            window_dimensions=(1, spec.kernel[1], spec.kernel[0], 1),
-            window_strides=(1, spec.stride[1], spec.stride[0], 1),
-            padding=((0, 0), (ph, ph), pad_w, (0, 0)),
-        )
-    if spec.kind == "gpool":
-        return jnp.mean(x, axis=(1, 2), keepdims=True)
-    if spec.kind == "fc":
-        flat = x.reshape(x.shape[0], -1)
-        y = flat @ p["w"] + p["b"]
-        return y.reshape(x.shape[0], 1, 1, -1)  # stay NHWC for uniformity
-    if spec.kind in ("identity", "input", "output"):
-        return x
-    raise NotImplementedError(spec.kind)
+    import warnings
+    from ...exec import backends as _backends
+    warnings.warn("set_conv_backend is deprecated; set CNNDef.backend or "
+                  "pass backend= to StageExecutor/PipelineRunner "
+                  "(executors built before this call keep their backend)",
+                  DeprecationWarning, stacklevel=2)
+    assert name in _backends.available_backends(), name
+    _backends.DEFAULT_BACKEND = name
 
 
 # ---------------------------------------------------------------------------

@@ -31,6 +31,18 @@ class TilePlan:
     def empty(self) -> bool:
         return all(a >= b for a, b in self.sink_ranges.values())
 
+    def signature(self) -> tuple:
+        """Hashable form of the exact ranges (executable-cache key part)."""
+        return (self.device_index,
+                tuple(sorted(self.sink_ranges.items())),
+                tuple(sorted(self.out_ranges.items())),
+                tuple(sorted(self.in_ranges.items())))
+
+
+def tile_signature(plans: Sequence["TilePlan"]) -> tuple:
+    """Hashable fingerprint of a whole stage's tiling."""
+    return tuple(tp.signature() for tp in plans)
+
 
 def plan_tiles(
     g: Graph,

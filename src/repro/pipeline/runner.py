@@ -27,17 +27,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..compat import shard_map
 
 from ..core.pipeline_dp import PipelinePlan
-from ..models.cnn.builder import CNNDef
 from .stage import StageExecutor, executors_from_plan
 
 
 @dataclass
 class PipelineRunner:
-    model: CNNDef
+    model: "CNNDef"                  # noqa: F821 (models.cnn.builder)
     plan: PipelinePlan
+    backend: str | None = None       # conv lowering; None -> model default
+    mode: str = "compiled"           # "compiled" | "eager" stage execution
 
     def __post_init__(self):
-        self.stages = executors_from_plan(self.model, self.plan.stages)
+        self.stages = executors_from_plan(self.model, self.plan.stages,
+                                          backend=self.backend,
+                                          mode=self.mode)
 
     def __call__(self, params, image: jax.Array) -> dict[str, jax.Array]:
         produced: dict[str, jax.Array] = {}
@@ -50,6 +53,18 @@ class PipelineRunner:
     def run_stream(self, params, frames: Sequence[jax.Array]
                    ) -> list[dict[str, jax.Array]]:
         return [self(params, f) for f in frames]
+
+    def run_frames(self, params, frames: jax.Array) -> dict[str, jax.Array]:
+        """Micro-batched stream: ``frames`` is a (F, N, H, W, C) stack;
+        each stage scans over the frame axis in one compiled dispatch
+        (``lax.scan``), so the Python overhead is per *stage*, not per
+        frame x stage x tile.  Returns sinks stacked along F."""
+        produced: dict[str, jax.Array] = {}
+        for ex in self.stages:
+            outs = ex.run_frames(params, produced, frames)
+            produced.update(outs)
+        sinks = self.model.graph.sinks()
+        return {s: produced[s] for s in sinks}
 
 
 # ---------------------------------------------------------------------------

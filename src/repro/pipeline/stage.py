@@ -1,21 +1,23 @@
 """Stage executor: run one pipeline stage's fused segment on device tiles.
 
-The default executor iterates tiles sequentially (single-host testing —
-bit-exact with the monolithic forward).  ``jit_stage`` builds a jitted
-callable per stage for the serving runtime.
+The default mode compiles the whole stage — all device tiles — into a
+single jitted executable through :mod:`repro.exec` (fetched from the
+executable cache, so identical stages across re-plans share one
+lowering).  ``mode="eager"`` keeps the seed's per-tile Python loop as
+the bit-exactness oracle and for one-shot runs where compilation would
+not amortize.  ``run_frames`` micro-batches a stack of frames through
+``lax.scan`` in one dispatch.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from ..core.graph import Graph
 from ..core.pipeline_dp import StagePlan
-from ..models.cnn.builder import CNNDef
 from .halo import TilePlan, plan_tiles, split_inputs, stitch_outputs
 
 
@@ -23,19 +25,34 @@ from .halo import TilePlan, plan_tiles, split_inputs, stitch_outputs
 class StageExecutor:
     """Executable form of one StagePlan for a CNNDef."""
 
-    model: CNNDef
+    model: "CNNDef"                  # noqa: F821 (models.cnn.builder)
     nodes: frozenset[str]
     fractions: list[float]
     name: str = "stage"
+    backend: str | None = None       # None -> model.backend -> registry default
+    mode: str = "compiled"           # "compiled" | "eager"
+    donate: bool = False             # donate boundary buffers to XLA — only
+    #                                  safe when the caller won't reuse them
 
     def __post_init__(self):
         g = self.model.graph
+        self.nodes = frozenset(self.nodes)
         self.sinks = g.sinks(self.nodes)
         self.plans: list[TilePlan] = plan_tiles(
             g, self.nodes, self.model.full_sizes, self.model.input_size,
             self.fractions)
         # (node, outside_pred) pairs fed across the stage boundary
         self.needs = self.model.boundary_needs(self.nodes)
+        if self.backend is None:
+            from ..exec import backends as _backends
+            self.backend = self.model.backend or _backends.DEFAULT_BACKEND
+        if self.mode not in ("compiled", "eager"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        # per-call-invariant part of the executable-cache key, computed
+        # once so the per-frame lookup only hashes boundary shapes
+        from ..exec.cache import static_stage_key
+        self._static_key = static_stage_key(self.model, self.nodes,
+                                            self.plans, self.needs)
 
     def boundary_inputs(self, produced: Mapping[str, jax.Array],
                         image: jax.Array | None
@@ -47,6 +64,36 @@ class StageExecutor:
     def __call__(self, params, produced: Mapping[str, jax.Array],
                  image: jax.Array | None = None) -> dict[str, jax.Array]:
         boundary = self.boundary_inputs(produced, image)
+        if self.mode == "eager":
+            return self._run_eager(params, boundary)
+        return self._executable(boundary)(params, boundary)
+
+    def run_frames(self, params, produced: Mapping[str, jax.Array],
+                   images: jax.Array | None = None) -> dict[str, jax.Array]:
+        """Frame-stack form of ``__call__``: every boundary tensor (and
+        ``images``) carries a leading frame axis; sinks come back stacked
+        the same way.  Compiled mode scans the stack in one dispatch;
+        eager mode loops frames through the oracle path and stacks."""
+        boundary = self.boundary_inputs(produced, images)
+        if self.mode == "eager":
+            n = next(iter(boundary.values())).shape[0]
+            per = [self._run_eager(params, {k: v[f] for k, v in
+                                            boundary.items()})
+                   for f in range(n)]
+            return {s: jnp.stack([o[s] for o in per]) for s in self.sinks}
+        return self._executable(boundary).run_frames(params, boundary)
+
+    # ------------------------------------------------------------------
+
+    def _executable(self, boundary):
+        from ..exec.cache import compiled_stage
+        return compiled_stage(self.model, self.nodes, self.plans,
+                              self.needs, self.sinks, backend=self.backend,
+                              relu=True, donate=self.donate,
+                              boundary=boundary, static_key=self._static_key)
+
+    def _run_eager(self, params, boundary) -> dict[str, jax.Array]:
+        """The seed path: eager Python loop over device tiles."""
         tiles_in = split_inputs(self.plans, self.needs, boundary)
         tiles_out = []
         for tp, tin in zip(self.plans, tiles_in):
@@ -54,13 +101,16 @@ class StageExecutor:
                 tiles_out.append({})
                 continue
             res = self.model.run_segment(params, self.nodes, tin,
-                                         ranges=(tp.out_ranges, tp.in_ranges))
+                                         ranges=(tp.out_ranges, tp.in_ranges),
+                                         backend=self.backend)
             tiles_out.append(res)
         return stitch_outputs(self.plans, self.sinks, tiles_out)
 
 
-def executors_from_plan(model: CNNDef, stages: Sequence[StagePlan]
-                        ) -> list[StageExecutor]:
+def executors_from_plan(model: "CNNDef", stages: Sequence[StagePlan],  # noqa: F821
+                        backend: str | None = None, mode: str = "compiled",
+                        donate: bool = False) -> list[StageExecutor]:
     return [StageExecutor(model, st.nodes, list(st.fractions),
-                          name=f"stage{si}")
+                          name=f"stage{si}", backend=backend, mode=mode,
+                          donate=donate)
             for si, st in enumerate(stages)]

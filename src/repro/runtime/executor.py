@@ -35,7 +35,7 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core.cost import Cluster
+from ..core.cost import Cluster, CostTable
 from ..core.pipeline_dp import StagePlan
 from ..core.planner import PicoPlan, plan as plan_full, recost, replan
 from ..core.graph import Graph
@@ -165,6 +165,8 @@ class PipelineRuntime:
         model=None,                     # CNNDef: real JAX compute per stage
         params=None,
         t_lim: float = float("inf"),
+        backend: str | None = None,     # conv lowering for real compute
+        cost_table: CostTable | None = None,  # measured costs (exec.calibrate)
     ):
         if model is not None:
             g = model.graph
@@ -177,9 +179,12 @@ class PipelineRuntime:
         self.t_lim = t_lim
         self.model = model
         self.params = params
+        self.backend = backend
+        self.cost_table = cost_table
         self.config = config or RuntimeConfig()
         self.rng = np.random.default_rng(self.config.seed)
-        self.pico = pico or plan_full(g, cluster, input_size, t_lim)
+        self.pico = pico or plan_full(g, cluster, input_size, t_lim,
+                                      cost_table=cost_table)
         self.monitor = Monitor(beta=self.config.ewma_beta,
                                drift_threshold=self.config.drift_threshold)
         self.pool = ActorPool(cluster.devices,
@@ -205,7 +210,10 @@ class PipelineRuntime:
                        for i, st in enumerate(self.pico.pipeline.stages)]
         if self.model is not None:
             from ..pipeline.stage import executors_from_plan
-            execs = executors_from_plan(self.model, self.pico.pipeline.stages)
+            # compiled executors: across re-plans, stages whose segment +
+            # tiling survive come straight from the executable cache
+            execs = executors_from_plan(self.model, self.pico.pipeline.stages,
+                                        backend=self.backend)
             for st, ex in zip(self.stages, execs):
                 st.executor = ex
 
@@ -449,7 +457,7 @@ class PipelineRuntime:
             for p in range(st.first_piece, st.last_piece + 1):
                 old_hosts[p] = names
         new = replan(self.g, calibrated, self.input_size, prev=old,
-                     t_lim=self.t_lim)
+                     t_lim=self.t_lim, cost_table=self.cost_table)
         # keep the incumbent plan if it is still runnable and wins when
         # both are priced with measured costs (the DP must use every
         # device, so a fresh plan can lose — e.g. after a weak join)
@@ -458,7 +466,7 @@ class PipelineRuntime:
                            for st in old.pipeline.stages for d in st.devices)
         if incumbent_ok:
             old_rc = recost(old.pipeline, calibrated, self.g,
-                            self.input_size)
+                            self.input_size, cost_table=self.cost_table)
             if old_rc.period <= new.period:
                 new = PicoPlan(old.partition, old_rc)
         mig_bytes = 0.0

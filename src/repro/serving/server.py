@@ -39,11 +39,14 @@ class ServeStats:
 
 class PipelineServer:
     def __init__(self, model: CNNDef, cluster: Cluster,
-                 t_lim: float = float("inf")):
+                 t_lim: float = float("inf"), backend: str | None = None,
+                 cost_table=None):
         self.model = model
         self.cluster = cluster
-        self.pico = plan(model.graph, cluster, model.input_size, t_lim)
-        self.runner = PipelineRunner(model, self.pico.pipeline)
+        self.pico = plan(model.graph, cluster, model.input_size, t_lim,
+                         cost_table=cost_table)
+        self.runner = PipelineRunner(model, self.pico.pipeline,
+                                     backend=backend)
         self.params = None
 
     def load(self, key=None):
@@ -96,13 +99,15 @@ class StreamingPipelineServer:
     """
 
     def __init__(self, model: CNNDef, cluster: Cluster,
-                 t_lim: float = float("inf"), config=None, churn=()):
+                 t_lim: float = float("inf"), config=None, churn=(),
+                 backend: str | None = None, cost_table=None):
         from ..runtime import PipelineRuntime, RuntimeConfig
         self.model = model
         self.cluster = cluster
         self._runtime_kw = dict(
             cluster=cluster, t_lim=t_lim,
-            config=config or RuntimeConfig(), churn=churn)
+            config=config or RuntimeConfig(), churn=churn,
+            backend=backend, cost_table=cost_table)
         self.params = None
 
     def load(self, key=None):

@@ -20,6 +20,71 @@ from repro.models.cnn.builder import GB
 from repro.pipeline import PipelineRunner
 from repro.pipeline.stage import StageExecutor
 
+# tiny-but-representative build of every zoo model (pallas runs in
+# interpret mode on CPU, so sizes are kept small)
+ZOO_TINY = {
+    "vgg16": dict(input_size=(40, 40), scale=0.1, head=False),
+    "yolov2": dict(input_size=(64, 64), scale=0.05),
+    "resnet34": dict(input_size=(64, 64), scale=0.1),
+    "inceptionv3": dict(input_size=(96, 96), scale=0.1),
+    "squeezenet": dict(input_size=(64, 64), scale=0.1),
+    "mobilenetv3": dict(input_size=(64, 64), scale=0.1),
+    "nasnet": dict(n_cells=2, input_size=(48, 48), scale=0.15),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ZOO_TINY))
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_compiled_stage_bit_exact_with_eager(name, backend):
+    """The `repro.exec` compiled stage path reproduces the seed's eager
+    tile loop for every zoo model on both backends: bit-for-bit on xla;
+    to ULP tolerance on pallas, which runs via interpret on CPU where
+    whole-stage fusion can reassociate the emulated kernel's ops."""
+    m = zoo.build(name, **ZOO_TINY[name])
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, m.input_size[1], m.input_size[0], 3))
+    fracs = [0.4, 0.35, 0.25]
+    eager = StageExecutor(m, frozenset(m.graph.layers), fracs,
+                          backend=backend, mode="eager")(params, {}, x)
+    compiled = StageExecutor(m, frozenset(m.graph.layers), fracs,
+                             backend=backend)(params, {}, x)
+    assert eager.keys() == compiled.keys()
+    for k in eager:
+        if backend == "xla":
+            np.testing.assert_array_equal(np.asarray(compiled[k]),
+                                          np.asarray(eager[k]))
+        else:
+            # interpret-mode pallas emulates the kernel with XLA ops; on
+            # CPU the whole-stage jit may fuse those ops differently
+            # than the seed's standalone-jit kernel call, shifting deep
+            # models (mobilenetv3: ~50 layers) by a few ULP — everything
+            # else is identical
+            np.testing.assert_allclose(np.asarray(compiled[k]),
+                                       np.asarray(eager[k]),
+                                       rtol=1e-6, atol=1e-7)
+    # and both match the monolithic reference numerically
+    ref = m.forward(params, x)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(compiled[k]),
+                                   np.asarray(ref[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_compiled_multi_stage_plan_bit_exact_with_eager():
+    """Whole-plan check: compiled and eager runners agree stage by stage
+    on a real PICO plan (not just the single fused stage)."""
+    m = zoo.resnet34(input_size=(96, 96), scale=0.1)
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    p = plan(m.graph, cluster, m.input_size)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, 96, 3))
+    out_c = PipelineRunner(m, p.pipeline)(params, x)
+    out_e = PipelineRunner(m, p.pipeline, mode="eager")(params, x)
+    for k in out_c:
+        np.testing.assert_array_equal(np.asarray(out_c[k]),
+                                      np.asarray(out_e[k]))
+
 
 @pytest.mark.parametrize("name,kw", [
     ("resnet34", dict(input_size=(96, 96), scale=0.1)),

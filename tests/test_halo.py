@@ -1,0 +1,104 @@
+"""`pipeline/halo.py:plan_tiles` edge cases: zero-fraction devices,
+fractions that don't sum to 1, single-device stages."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import proportional_widths
+from repro.models.cnn import zoo
+from repro.models.cnn.builder import GB
+from repro.pipeline.halo import plan_tiles, tile_signature
+from repro.pipeline.stage import StageExecutor
+
+
+def _chain(w=24):
+    b = GB("chain", (w, w))
+    x = b.conv(None, 4, 3, p=1)
+    x = b.conv(x, 4, 3, p=1)
+    x = b.pool(x, 2, 2)
+    return b.done()
+
+
+def _exec_and_check(m, fractions, x_key=1):
+    params = m.init(jax.random.PRNGKey(0))
+    w, h = m.input_size
+    x = jax.random.normal(jax.random.PRNGKey(x_key), (1, h, w, 3))
+    ref = m.forward(params, x)
+    ex = StageExecutor(m, frozenset(m.graph.layers), list(fractions))
+    out = ex(params, {}, x)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-5)
+    return ex
+
+
+def test_zero_fraction_device_gets_empty_tile():
+    m = _chain()
+    ex = _exec_and_check(m, [0.5, 0.0, 0.5])
+    assert ex.plans[1].empty
+    assert not ex.plans[0].empty and not ex.plans[2].empty
+    # the empty tile carries no ranges and contributes no output width
+    for s, (a, b) in ex.plans[1].sink_ranges.items():
+        assert a >= b
+
+
+def test_zero_weight_proportional_widths():
+    assert proportional_widths(12, [1.0, 0.0, 1.0]) == [6, 0, 6]
+    assert proportional_widths(3, [0.0, 1.0]) == [0, 3]
+    with pytest.raises(ValueError):
+        proportional_widths(8, [0.0, 0.0])
+
+
+def test_fractions_not_summing_to_one_are_normalized():
+    m = _chain()
+    # sums to 0.5 and to 3.0: widths must still cover the full feature
+    for fr in ([0.25, 0.25], [2.0, 1.0]):
+        ex = _exec_and_check(m, fr)
+        for s in ex.sinks:
+            covered = sorted(tp.sink_ranges[s] for tp in ex.plans)
+            assert covered[0][0] == 0
+            assert covered[-1][1] == m.full_sizes[s][0]
+            for (a0, b0), (a1, b1) in zip(covered, covered[1:]):
+                assert b0 == a1          # contiguous, no overlap, no gap
+
+
+def test_single_device_stage_is_monolithic():
+    m = _chain()
+    plans = plan_tiles(m.graph, frozenset(m.graph.layers), m.full_sizes,
+                       m.input_size, [1.0])
+    assert len(plans) == 1
+    tp = plans[0]
+    assert not tp.empty
+    for s, (a, b) in tp.sink_ranges.items():
+        assert (a, b) == (0, m.full_sizes[s][0])
+    _exec_and_check(m, [1.0])
+
+
+def test_more_devices_than_columns():
+    """A sink narrower than the device group: surplus devices idle."""
+    b = GB("narrow", (8, 8))
+    x = b.conv(None, 4, 3, p=1)
+    x = b.pool(x, 2, 2)   # 4 columns
+    x = b.pool(x, 2, 2)   # 2 columns
+    m = b.done()
+    ex = _exec_and_check(m, [0.4, 0.3, 0.2, 0.1])
+    empties = [tp.empty for tp in ex.plans]
+    assert sum(empties) == 2          # only 2 columns to hand out
+    assert empties == [False, False, True, True]  # largest fractions win
+
+
+def test_tile_signature_stable_and_distinct():
+    m = _chain()
+    nodes = frozenset(m.graph.layers)
+    a = plan_tiles(m.graph, nodes, m.full_sizes, m.input_size, [0.5, 0.5])
+    b = plan_tiles(m.graph, nodes, m.full_sizes, m.input_size, [0.5, 0.5])
+    c = plan_tiles(m.graph, nodes, m.full_sizes, m.input_size, [0.75, 0.25])
+    assert tile_signature(a) == tile_signature(b)
+    assert tile_signature(a) != tile_signature(c)
+    hash(tile_signature(a))   # usable as a cache key
+
+
+def test_zero_fraction_on_real_zoo_model():
+    m = zoo.squeezenet(input_size=(64, 64), scale=0.1)
+    _exec_and_check(m, [0.5, 0.0, 0.3, 0.2])

@@ -99,6 +99,39 @@ def _equalized(plan_):
     return PipelinePlan(stages, plan_.period, plan_.latency)
 
 
+def test_adjust_raises_when_cluster_smaller_than_plan(small_model):
+    """Regression: the seed silently filled unassigned stages with the
+    homogenized *placeholder* devices (``devs or list(st.devices)``),
+    producing a plan naming fictitious "avgN" devices.  A cluster with
+    fewer devices than the plan has slots must fail loudly instead."""
+    from repro.core.cost import stage_cost
+    from repro.core.pipeline_dp import PipelinePlan, StagePlan
+    m = small_model
+    big = make_pi_cluster([1.0, 1.0, 1.0, 1.0])
+    part = partition_graph(m.graph, m.input_size, n_split=4)
+    full = m.graph.forward_sizes(m.input_size)
+    homo = big.homogenized()
+    # hand-build a 2-stage homogeneous plan (2 slots each) so the test
+    # doesn't depend on what the DP happens to produce
+    cut = len(part.pieces) // 2
+    stages = []
+    for i, (lo, hi) in enumerate([(0, cut - 1), (cut, len(part.pieces) - 1)]):
+        nodes = frozenset().union(*(p.nodes for p in part.pieces[lo:hi + 1]))
+        devs = homo.devices[2 * i: 2 * i + 2]
+        sc = stage_cost(m.graph, nodes, full, m.input_size, devs, homo,
+                        [0.5, 0.5])
+        stages.append(StagePlan(lo, hi, list(devs), nodes, sc, [0.5, 0.5]))
+    plan4 = PipelinePlan(stages, max(s.cost.total for s in stages),
+                         sum(s.cost.total for s in stages))
+    # 4 devices for 4 slots: fine
+    adjust_stages(plan4, big, m.graph, m.input_size)
+    # 1 device for 4 slots: the greedy fills the hottest stage and would
+    # leave the other empty -> must raise, not leak placeholders
+    tiny = make_pi_cluster([1.0])
+    with pytest.raises(ValueError, match="received no devices"):
+        adjust_stages(plan4, tiny, m.graph, m.input_size)
+
+
 def test_full_plan_on_asymmetric_cluster_end_to_end(small_model):
     m = small_model
     cluster = Cluster([Device("big", 6e9), Device("mid", 2e9),

@@ -163,21 +163,19 @@ def test_moe_gemm_sweep(shape, dtype):
 
 def test_conv_kernel_integrates_with_cnn_zoo():
     """The Pallas conv kernel drops into the executable zoo and the
-    pipelined stage executor unchanged (system <-> kernel integration)."""
+    pipelined stage executor unchanged (system <-> kernel integration).
+    The backend is selected explicitly per model/executor — no module
+    global (the seed's `set_conv_backend` is deprecated)."""
     from repro.models.cnn import zoo
-    from repro.models.cnn import builder
     from repro.pipeline.stage import StageExecutor
     m = zoo.vgg16(input_size=(40, 40), scale=0.1, head=False)
     params = m.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 40, 40, 3))
     ref = m.forward(params, x)
-    builder.set_conv_backend("pallas")
-    try:
-        out = m.forward(params, x)
-        ex = StageExecutor(m, frozenset(m.graph.layers), [0.5, 0.5])
-        tiled = ex(params, {}, x)
-    finally:
-        builder.set_conv_backend("xla")
+    out = m.forward(params, x, backend="pallas")
+    ex = StageExecutor(m, frozenset(m.graph.layers), [0.5, 0.5],
+                       backend="pallas")
+    tiled = ex(params, {}, x)
     for k in ref:
         np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
                                    rtol=2e-5, atol=2e-5)
