@@ -1,24 +1,55 @@
 """Run every paper-artifact benchmark.  Prints ``name,us_per_call,derived``
 CSV rows (one per measurement), mirroring the paper's tables/figures:
 
-  table4   Algorithm 1 runtime/pieces per CNN         (paper Table 4)
-  fig5     FLOPs vs fused layers x devices            (paper Fig. 5)
-  fig12    piece- vs block-granularity speedup        (paper Fig. 12)
-  fig13    throughput: LW/EFL/OFL/CE/PICO             (paper Figs. 13-14)
-  table5   heterogeneous utilization/redundancy/mem   (paper Table 5)
-  fig15    memory + energy vs devices                 (paper Figs. 15-16)
-  table67  PICO vs BFS-optimal                        (paper Tables 6-7)
-  runtime  event-runtime churn adaptivity             (new subsystem)
-  exec     eager tile loop vs compiled stage path     (repro.exec)
+  table4     Algorithm 1 runtime/pieces per CNN         (paper Table 4)
+  fig5       FLOPs vs fused layers x devices            (paper Fig. 5)
+  fig12      piece- vs block-granularity speedup        (paper Fig. 12)
+  fig13      throughput: LW/EFL/OFL/CE/PICO             (paper Figs. 13-14)
+  table5     heterogeneous utilization/redundancy/mem   (paper Table 5)
+  fig15      memory + energy vs devices                 (paper Figs. 15-16)
+  table67    PICO vs BFS-optimal                        (paper Tables 6-7)
+  runtime    event-runtime churn adaptivity             (repro.runtime)
+  exec       eager tile loop vs compiled stage path     (repro.exec)
+  serving    multi-tenant scheduler vs time-sliced      (repro.serving)
 
 Use --fast to trim the slowest sweeps (full mode is the default for
 ``python -m benchmarks.run``).  --smoke runs a tiny-config subset for
-CI: the exec-backend microbenchmark plus the cheapest paper artifacts.
+CI.  --out <path> additionally writes the rows plus a flattened
+``metrics`` dict as JSON — the one code path CI's bench-regression gate
+(``tools/bench_gate.py``) and local runs share.
 """
 
 import argparse
+import json
 import sys
 import time
+
+
+def parse_metrics(rows: list[str]) -> dict[str, float]:
+    """Flatten CSV rows into gateable metrics.
+
+    ``name,us,derived`` becomes ``{name}.us -> us`` plus, when
+    ``derived`` is a bare number, ``{name} -> value``, or, when it is
+    ``k=v[;k=v...]``, ``{name}.{k} -> v`` for every numeric ``v``.
+    """
+    metrics: dict[str, float] = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        metrics[f"{name}.us"] = float(us)
+        try:
+            metrics[name] = float(derived)
+            continue
+        except ValueError:
+            pass
+        for part in derived.split(";"):
+            if "=" not in part:
+                continue
+            k, v = part.split("=", 1)
+            try:
+                metrics[f"{name}.{k}"] = float(v)
+            except ValueError:
+                pass
+    return metrics
 
 
 def main() -> None:
@@ -28,11 +59,14 @@ def main() -> None:
                     help="tiny-config CI subset (implies --fast configs)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write rows + flattened metrics as JSON")
     args = ap.parse_args()
 
     from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
                    fig13_throughput, table5_hetero, fig15_memory,
-                   table67_optimal, fig_runtime_adapt, fig_exec_backend)
+                   table67_optimal, fig_runtime_adapt, fig_exec_backend,
+                   fig_serving_mt)
     benches = {
         "table4": lambda: table4_partition.run(),
         "fig5": lambda: fig5_redundancy.run(),
@@ -46,12 +80,15 @@ def main() -> None:
             models=("squeezenet",) if args.fast else ("vgg16", "squeezenet"),
             frames=120 if args.fast else fig_runtime_adapt.FRAMES),
         "exec": lambda: fig_exec_backend.run(smoke=args.smoke or args.fast),
+        "serving": lambda: fig_serving_mt.run(smoke=args.smoke or args.fast),
     }
     if args.smoke:
-        # CI smoke: the exec-backend microbenchmark + the cheapest paper
-        # artifacts, all in tiny configs
+        # CI smoke: the exec-backend microbenchmark, the multi-tenant
+        # serving comparison, and the cheapest paper artifacts, all in
+        # tiny configs
         smoke = {
             "exec": benches["exec"],
+            "serving": benches["serving"],
             "table4": benches["table4"],
             "fig5": benches["fig5"],
             # >= 2x DROP_AFTER frames so the churn event actually fires
@@ -66,12 +103,21 @@ def main() -> None:
                  f"{' in --smoke mode' if args.smoke else ''}: "
                  f"{sorted(benches)}")
     t0 = time.time()
-    n = 0
+    all_rows: list[str] = []
     print("name,us_per_call,derived")
     for name in only:
-        rows = benches[name]()
-        n += len(rows)
-    print(f"# {n} rows in {time.time()-t0:.1f}s", file=sys.stderr)
+        all_rows.extend(benches[name]())
+    wall = time.time() - t0
+    print(f"# {len(all_rows)} rows in {wall:.1f}s", file=sys.stderr)
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump({"rows": all_rows,
+                       "metrics": parse_metrics(all_rows),
+                       "wall_s": wall,
+                       "mode": ("smoke" if args.smoke
+                                else "fast" if args.fast else "full")},
+                      fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,8 @@ from .partition import (Piece, PartitionResult, partition_graph,
                         block_pieces)
 from .pipeline_dp import PipelineDP, PipelinePlan, StagePlan, plan_pipeline
 from .hetero import adjust_stages
-from .planner import PicoPlan, plan, replan, recost
+from .planner import (PicoPlan, plan, replan, recost, partition_cluster,
+                      split_devices, ClusterPartition, TenantShare)
 from .simulate import simulate, SimReport, DeviceReport
 from . import baselines
 
@@ -23,7 +24,9 @@ __all__ = [
     "Piece", "PartitionResult", "partition_graph", "partition_graph_dnc",
     "piece_redundancy", "chain_pieces", "block_pieces",
     "PipelineDP", "PipelinePlan", "StagePlan", "plan_pipeline",
-    "adjust_stages", "PicoPlan", "plan", "replan", "recost", "simulate",
+    "adjust_stages", "PicoPlan", "plan", "replan", "recost",
+    "partition_cluster", "split_devices", "ClusterPartition", "TenantShare",
+    "simulate",
     "SimReport",
     "DeviceReport", "baselines",
 ]

@@ -97,6 +97,119 @@ def replan(
                 cost_table=cost_table)
 
 
+@dataclass
+class TenantShare:
+    """One tenant's slice of a partitioned cluster."""
+
+    index: int
+    cluster: Cluster
+    pico: PicoPlan
+
+    @property
+    def capacity(self) -> float:
+        return self.cluster.total_capacity
+
+    @property
+    def device_names(self) -> frozenset[str]:
+        return frozenset(d.name for d in self.cluster.devices)
+
+
+@dataclass
+class ClusterPartition:
+    shares: list[TenantShare]
+    weights: list[float]
+
+    @property
+    def aggregate_throughput(self) -> float:
+        """Modeled frames/s summed across tenants (each sub-pipeline
+        saturated)."""
+        return sum(1.0 / s.pico.period for s in self.shares
+                   if s.pico.period > 0)
+
+    def assignment(self) -> dict[int, tuple[str, ...]]:
+        return {s.index: tuple(d.name for d in s.cluster.devices)
+                for s in self.shares}
+
+
+def split_devices(cluster: Cluster, weights: Sequence[float]) -> list[list]:
+    """Device-split step of :func:`partition_cluster` (no planning):
+    every tenant gets one device (biggest devices to biggest weights),
+    then each remaining device goes largest-first to the tenant most
+    below its weighted capacity target.  Cheap enough for a control
+    loop to test whether a re-partition would change anything."""
+    n = len(weights)
+    w = [float(x) for x in weights]
+    if n == 0 or any(x <= 0 for x in w):
+        raise ValueError("weights must be positive, one per tenant")
+    if len(cluster.devices) < n:
+        raise ValueError(f"{n} tenants need >= {n} devices, cluster has "
+                         f"{len(cluster.devices)}")
+    total_w = sum(w)
+    total_cap = cluster.total_capacity
+    devs = cluster.sorted_by_capacity()
+    order = sorted(range(n), key=lambda i: -w[i])
+    buckets: list[list] = [[] for _ in range(n)]
+    cap = [0.0] * n
+    for slot, ti in enumerate(order):
+        buckets[ti].append(devs[slot])
+        cap[ti] += devs[slot].capacity
+    for d in devs[n:]:
+        ti = min(range(n), key=lambda i: (cap[i] / (w[i] / total_w
+                                                    * total_cap), i))
+        buckets[ti].append(d)
+        cap[ti] += d.capacity
+    return buckets
+
+
+def partition_cluster(
+    models: Sequence,
+    cluster: Cluster,
+    weights: Sequence[float] | None = None,
+    t_lims: Sequence[float] | None = None,
+    cost_table: CostTable | None = None,
+    prev: Sequence[PicoPlan | None] | None = None,
+) -> ClusterPartition:
+    """Split one cluster's devices across several co-hosted models and
+    run the PICO optimization on each sub-cluster (the many-to-many
+    mapping lifted to multi-tenant serving).
+
+    ``models`` are graph carriers (``CNNDef`` or anything with
+    ``.graph`` and ``.input_size``); ``weights`` are relative capacity
+    entitlements (tenant priority x observed load), defaulting to equal.
+    Every tenant gets at least one device; remaining devices go
+    largest-first to the tenant most below its weighted capacity
+    target.  ``prev[i]`` (a prior :class:`PicoPlan` for model ``i``)
+    reuses Algorithm 1's piece chain via :func:`replan` so load-shift
+    re-partitions only redo the device-dependent planning steps.
+    """
+    n = len(models)
+    if n == 0:
+        raise ValueError("partition_cluster needs at least one model")
+    w = [1.0] * n if weights is None else [float(x) for x in weights]
+    if len(w) != n:
+        raise ValueError("weights must be positive, one per model")
+    buckets = split_devices(cluster, w)
+
+    shares = []
+    for i, bucket in enumerate(buckets):
+        names = {d.name for d in bucket}
+        pairs = {k: v for k, v in cluster.pair_bandwidth.items()
+                 if k[0] in names and k[1] in names}
+        sub = Cluster(bucket, bandwidth=cluster.bandwidth,
+                      pair_bandwidth=pairs)
+        m = models[i]
+        t_lim = t_lims[i] if t_lims is not None else float("inf")
+        prev_i = prev[i] if prev is not None else None
+        if prev_i is not None:
+            pico = replan(m.graph, sub, m.input_size, prev=prev_i,
+                          t_lim=t_lim, cost_table=cost_table)
+        else:
+            pico = plan(m.graph, sub, m.input_size, t_lim,
+                        cost_table=cost_table)
+        shares.append(TenantShare(i, sub, pico))
+    return ClusterPartition(shares, w)
+
+
 def recost(
     pipeline: PipelinePlan,
     cluster: Cluster,

@@ -27,6 +27,16 @@ class CacheStats:
     def entries(self) -> int:
         return len(_CACHE)
 
+    def snapshot(self) -> "CacheStats":
+        """Frozen copy, for windowed accounting (``since``)."""
+        return CacheStats(self.hits, self.misses, self.evictions)
+
+    def since(self, mark: "CacheStats") -> "CacheStats":
+        """Counter deltas accumulated after ``mark`` — how many stage
+        compilations a serve / re-plan actually paid vs reused."""
+        return CacheStats(self.hits - mark.hits, self.misses - mark.misses,
+                          self.evictions - mark.evictions)
+
 
 _CACHE: "OrderedDict[tuple, CompiledStage]" = OrderedDict()
 _STATS = CacheStats()

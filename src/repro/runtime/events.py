@@ -21,6 +21,12 @@ class EventKind(Enum):
     STAGE_DONE = auto()         # compute + comm done; stage frees, data moves
     CHURN = auto()              # injected cluster change (join/leave/...)
     MIGRATION_DONE = auto()     # re-plan state transfer finished
+    # multi-tenant serving control plane (serving.scheduler)
+    REQUEST_ARRIVAL = auto()    # a tenant request reaches admission control
+    CONTROL_TICK = auto()       # periodic load / rebalance check
+    TENANT_JOIN = auto()        # a tenant joins the serving fleet
+    TENANT_LEAVE = auto()       # a tenant leaves; its devices are reclaimed
+    REPARTITION_DONE = auto()   # cross-tenant device migration finished
 
 
 @dataclass(order=True)
@@ -49,6 +55,16 @@ class EventQueue:
             ev = heapq.heappop(self._heap)
             if not ev.cancelled:
                 return ev
+        return None
+
+    def peek(self) -> Event | None:
+        """Earliest live event without removing it (cancelled entries are
+        discarded on the way — heap order is unaffected)."""
+        while self._heap:
+            if self._heap[0].cancelled:
+                heapq.heappop(self._heap)
+                continue
+            return self._heap[0]
         return None
 
     def __len__(self) -> int:

@@ -24,6 +24,20 @@ The monitor records observed-vs-nominal time per device; churn events
 on the measured-calibrated cluster at a frame boundary: in-flight
 frames drain, re-assigned stages pay a parameter-migration transfer,
 then frames resume at the stage covering their next unfinished piece.
+
+Two serving extensions (used by ``serving.scheduler``):
+
+* **continuous micro-batching** — with ``RuntimeConfig.max_batch > 1``
+  stage 0 coalesces its queued frames into one batch whenever it goes
+  idle; the batch travels the pipeline as a unit, compute/comm phases
+  scale with the batch size, and real numerics go through the compiled
+  ``StageExecutor.run_frames`` scan path.  Queued frames whose
+  ``deadline`` has passed are dropped at coalesce time.
+* **stream mode** — ``begin_stream()`` + ``admit()`` + ``step()`` let an
+  external driver (the multi-tenant scheduler) feed frames dynamically,
+  interleave several runtimes on one virtual timeline, ``pause()``
+  launches to drain, and ``harvest()`` queued frames for re-admission
+  after a cross-tenant re-partition.
 """
 
 from __future__ import annotations
@@ -65,6 +79,7 @@ class RuntimeConfig:
     drift_cooldown: int = 24        # monitor samples between drift re-plans
     ewma_beta: float = 0.3
     migration_bandwidth: float | None = None    # None = cluster bandwidth
+    max_batch: int = 1              # stage-0 coalescing cap (1 = no batching)
     trace: bool = False
 
     @classmethod
@@ -81,6 +96,41 @@ class Frame:
     restarts: int = 0
     image: object = None                # real-compute input tensor
     produced: dict = field(default_factory=dict)
+    deadline: float | None = None       # drop if still queued past this
+    dropped: bool = False               # deadline expired before launch
+
+
+def coalesce(queue: deque, now: float, max_batch: int):
+    """Pop up to ``max_batch`` items off ``queue`` (FIFO), expiring any
+    whose ``deadline`` attribute is set and already past ``now``.
+
+    Returns ``(batch, expired)``.  Expired items do not count against
+    ``max_batch``; arrival order is preserved in both lists.  This is
+    the batch-formation primitive for stage-0 continuous batching;
+    ``serving.queueing`` re-exports it for the policy-level API.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    batch, expired = [], []
+    while queue and len(batch) < max_batch:
+        item = queue.popleft()
+        deadline = getattr(item, "deadline", None)
+        if deadline is not None and now > deadline:
+            expired.append(item)
+        else:
+            batch.append(item)
+    return batch, expired
+
+
+@dataclass
+class _Batch:
+    """A cohort of frames coalesced at stage 0 that travels the pipeline
+    as one scheduling unit (one ``run_frames`` dispatch per stage)."""
+
+    frames: list
+
+    def __len__(self) -> int:
+        return len(self.frames)
 
 
 @dataclass
@@ -119,6 +169,7 @@ class RuntimeReport:
     replans: list[ReplanRecord]
     completions: list[tuple[int, float, float]]   # (fid, arrival, done)
     restarts: int = 0
+    dropped: int = 0                # deadline-expired while queued
     outputs: dict[int, dict] = field(default_factory=dict)
     trace: list[tuple] = field(default_factory=list)
 
@@ -148,8 +199,8 @@ class _StageState:
     plan: StagePlan
     index: int
     executor: object = None             # StageExecutor in real-compute mode
-    queue: deque = field(default_factory=deque)
-    active: Frame | None = None
+    queue: deque = field(default_factory=deque)  # stage 0: Frames; else _Batch
+    active: "_Batch | None" = None
     pending: Event | None = None
 
 
@@ -227,6 +278,27 @@ class PipelineRuntime:
     # run loop
     # ------------------------------------------------------------------
 
+    def _begin(self) -> None:
+        if getattr(self, "_ran", False):
+            raise RuntimeError("PipelineRuntime is single-use: actor clocks, "
+                               "monitor state and the churn schedule are "
+                               "consumed — build a fresh instance")
+        self._ran = True
+        self.q = EventQueue()
+        self._draining = False
+        self._paused = False
+        self._drain_reason = ""
+        self._deferred_replan: str | None = None
+        self._completed = 0
+        self._dropped = 0
+        self._n_frames = 0
+        self._outputs: dict[int, dict] = {}
+        self._all_frames: list[Frame] = []
+        # stream-mode hooks (set by serving.scheduler): called as
+        # on_complete(frame, t, output_dict) / on_drop(frame, t)
+        self.on_complete = getattr(self, "on_complete", None)
+        self.on_drop = getattr(self, "on_drop", None)
+
     def run(self, n_frames: int = 64, inputs: Sequence | None = None,
             interarrival: float = 0.0,
             arrivals: Sequence[float] | None = None) -> RuntimeReport:
@@ -240,18 +312,9 @@ class PipelineRuntime:
             raise ValueError("real-compute mode needs params")
         if self.model is not None and inputs is None:
             raise ValueError("real-compute mode needs inputs=")
-        if getattr(self, "_ran", False):
-            raise RuntimeError("PipelineRuntime is single-use: actor clocks, "
-                               "monitor state and the churn schedule are "
-                               "consumed — build a fresh instance")
-        self._ran = True
-        self.q = EventQueue()
-        self._draining = False
-        self._drain_reason = ""
-        self._deferred_replan: str | None = None
-        self._completed = 0
+        self._begin()
+        self._stream = False
         self._n_frames = n_frames
-        self._outputs: dict[int, dict] = {}
         frames = [Frame(i, arrival=(arrivals[i] if arrivals is not None
                                     else i * interarrival),
                         image=None if inputs is None else inputs[i])
@@ -263,21 +326,105 @@ class PipelineRuntime:
         for ce in self.churn:
             self.q.push(ce.time, EventKind.CHURN, churn=ce)
         now = 0.0
-        while self._completed < n_frames:
-            ev = self.q.pop()
+        while self._completed + self._dropped < n_frames:
+            ev = self.step()
             if ev is None:
                 raise RuntimeError(
                     f"runtime deadlock: {self._completed}/{n_frames} frames "
                     f"done, draining={self._draining}")
             now = ev.time
-            self._dispatch(ev)
         return self._report(now)
+
+    # ------------------------------------------------------------------
+    # stream mode: externally driven (serving.scheduler)
+    # ------------------------------------------------------------------
+
+    def begin_stream(self) -> "PipelineRuntime":
+        """Open the runtime for external driving: frames are ``admit``-ed
+        dynamically, the caller pops events via ``step()`` (interleaving
+        several runtimes on one virtual timeline), and reads the report
+        when it decides the stream is over."""
+        if self.model is not None and self.params is None:
+            raise ValueError("real-compute mode needs params")
+        self._begin()
+        self._stream = True
+        for ce in self.churn:
+            self.q.push(ce.time, EventKind.CHURN, churn=ce)
+        return self
+
+    def admit(self, frame: Frame, t: float | None = None) -> None:
+        """Schedule a frame's arrival at the stage covering its next
+        unfinished piece (stage 0 for fresh frames; mid-pipeline for
+        frames harvested from a predecessor runtime)."""
+        t = frame.arrival if t is None else t
+        self._all_frames.append(frame)
+        self._n_frames = len(self._all_frames)
+        s = self._stage_for_piece(frame.next_piece) if frame.next_piece else 0
+        if s == 0:
+            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=0, frame=frame)
+        else:
+            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s,
+                        batch=_Batch([frame]))
+
+    def step(self) -> Event | None:
+        """Pop and dispatch the earliest event; None when the queue is
+        dry.  ``run()`` is a loop over this."""
+        ev = self.q.pop()
+        if ev is not None:
+            self._dispatch(ev)
+        return ev
+
+    def peek_time(self) -> float | None:
+        ev = self.q.peek()
+        return ev.time if ev is not None else None
+
+    @property
+    def idle(self) -> bool:
+        """No batch is in flight on any stage (queued frames may remain)."""
+        return all(st.active is None for st in self.stages)
+
+    @property
+    def completed(self) -> int:
+        return self._completed
+
+    def pause(self) -> None:
+        """Stop launching new batches; in-flight batches run to
+        completion.  Used to drain before a cross-tenant re-partition."""
+        self._paused = True
+
+    def resume(self, t: float) -> None:
+        self._paused = False
+        for s in range(len(self.stages)):
+            self._try_start(t, s)
+
+    def harvest(self) -> list[Frame]:
+        """Remove and return every queued (not in-flight) frame — stage
+        queues AND not-yet-dispatched arrival events — for re-admission
+        into a successor runtime.  Requires ``idle``."""
+        if not self.idle:
+            raise RuntimeError("harvest() while batches are in flight")
+        frames = self._collect_inflight()
+        ev = self.q.pop()
+        while ev is not None:
+            if ev.kind is EventKind.FRAME_ARRIVAL:
+                item = ev.payload.get("frame") or ev.payload.get("batch")
+                frames.extend([item] if isinstance(item, Frame)
+                              else item.frames)
+            ev = self.q.pop()
+        frames.sort(key=lambda f: (f.next_piece == 0, f.fid))
+        return frames
+
+    def report(self, now: float | None = None) -> RuntimeReport:
+        done = [f.done for f in self._all_frames if f.done is not None]
+        return self._report(now if now is not None
+                            else (max(done) if done else 0.0))
 
     def _dispatch(self, ev: Event) -> None:
         k = ev.kind
         if k is EventKind.FRAME_ARRIVAL:
             self._on_arrival(ev.time, ev.payload["stage"],
-                             ev.payload["frame"])
+                             ev.payload.get("frame")
+                             or ev.payload.get("batch"))
         elif k is EventKind.COMPUTE_DONE:
             self._on_compute_done(ev.time, ev.payload)
         elif k is EventKind.STAGE_DONE:
@@ -291,27 +438,49 @@ class PipelineRuntime:
     # handlers
     # ------------------------------------------------------------------
 
-    def _on_arrival(self, t: float, s: int, frame: Frame) -> None:
+    def _on_arrival(self, t: float, s: int, item) -> None:
         st = self.stages[s]
-        st.queue.append(frame)
+        st.queue.append(item)
         for d in st.plan.devices:
             if d.name in self.pool:
                 self.pool[d.name].enqueue()
         if self.config.trace:
-            self._trace.append((t, "arrival", s, frame.fid))
+            fids = ([item.fid] if isinstance(item, Frame)
+                    else [f.fid for f in item.frames])
+            self._trace.append((t, "arrival", s, *fids))
         self._try_start(t, s)
+
+    def _coalesce(self, t: float, queue: deque) -> "_Batch | None":
+        """Stage-0 continuous batching: pop up to ``max_batch`` queued
+        frames, dropping those whose deadline already passed."""
+        frames, expired = coalesce(queue, t, self.config.max_batch)
+        for fr in expired:
+            fr.dropped = True
+            self._dropped += 1
+            if self.config.trace:
+                self._trace.append((t, "expired", 0, fr.fid))
+            if self.on_drop is not None:
+                self.on_drop(fr, t)
+        return _Batch(frames) if frames else None
 
     def _try_start(self, t: float, s: int) -> None:
         st = self.stages[s]
-        if st.active is not None or not st.queue or self._draining:
+        if (st.active is not None or not st.queue or self._draining
+                or self._paused):
             return
-        frame = st.queue.popleft()
-        st.active = frame
+        if s == 0:
+            batch = self._coalesce(t, st.queue)
+            if batch is None:
+                return
+        else:
+            batch = st.queue.popleft()
+        st.active = batch
+        b = len(batch)
         seg = st.plan.cost.seg
         durs, modeled = [], []
         for k, dev in enumerate(st.plan.devices):
             act = self.pool[dev.name]
-            nominal = act.device.t_comp(seg.per_device_flops[k])
+            nominal = act.device.t_comp(seg.per_device_flops[k]) * b
             noise = (float(self.rng.uniform(-1.0, 1.0))
                      * self.config.compute_noise)
             true_dur = act.compute_time(nominal, noise)
@@ -321,43 +490,75 @@ class PipelineRuntime:
             modeled.append(nominal)
         dur = max(durs)
         if st.executor is not None:
-            outs = st.executor(self.params, frame.produced, frame.image)
-            frame.produced.update(outs)
+            self._exec_batch(st, batch)
         st.pending = self.q.push(t + dur, EventKind.COMPUTE_DONE,
-                                 stage=s, frame=frame,
+                                 stage=s, batch=batch,
                                  modeled=modeled, observed=durs)
         if self.config.trace:
-            self._trace.append((t, "compute", s, frame.fid, dur))
+            self._trace.append((t, "compute", s,
+                                [f.fid for f in batch.frames], dur))
+
+    def _exec_batch(self, st: _StageState, batch: "_Batch") -> None:
+        """Real numerics for one batch: single frames keep the seed's
+        bit-exact ``__call__`` path; larger batches stack the boundary
+        tensors and go through the compiled ``run_frames`` scan."""
+        if len(batch) == 1:
+            fr = batch.frames[0]
+            outs = st.executor(self.params, fr.produced, fr.image)
+            fr.produced.update(outs)
+            return
+        import jax.numpy as jnp
+        frames = batch.frames
+        produced: dict[str, object] = {}
+        images = None
+        for (_, p) in st.executor.needs:
+            if p is None:
+                if images is None:
+                    images = jnp.stack([fr.image for fr in frames])
+            elif p not in produced:
+                produced[p] = jnp.stack([fr.produced[p] for fr in frames])
+        outs = st.executor.run_frames(self.params, produced, images)
+        for i, fr in enumerate(frames):
+            fr.produced.update({k: v[i] for k, v in outs.items()})
 
     def _on_compute_done(self, t: float, payload: dict) -> None:
-        s, frame = payload["stage"], payload["frame"]
+        s, batch = payload["stage"], payload["batch"]
         st = self.stages[s]
         for dev, m, o in zip(st.plan.devices, payload["modeled"],
                              payload["observed"]):
             self.monitor.record(s, dev.name, m, o)
         hop = self.links.hop(s)
-        intra = st.plan.cost.t_comm * hop.degradation
-        inter = hop.transfer_time(sum(st.plan.cost.seg.out_bytes), self.rng)
+        b = len(batch)
+        intra = st.plan.cost.t_comm * hop.degradation * b
+        inter = hop.transfer_time(sum(st.plan.cost.seg.out_bytes) * b,
+                                  self.rng)
         st.pending = self.q.push(t + intra + inter, EventKind.STAGE_DONE,
-                                 stage=s, frame=frame)
+                                 stage=s, batch=batch)
 
     def _on_stage_done(self, t: float, payload: dict) -> None:
-        s, frame = payload["stage"], payload["frame"]
+        s, batch = payload["stage"], payload["batch"]
         st = self.stages[s]
         st.active = None
         st.pending = None
-        frame.next_piece = st.plan.last_piece + 1
+        for frame in batch.frames:
+            frame.next_piece = st.plan.last_piece + 1
         if self.config.trace:
-            self._trace.append((t, "done", s, frame.fid))
+            self._trace.append((t, "done", s,
+                                *[f.fid for f in batch.frames]))
         if s + 1 < len(self.stages):
-            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s + 1, frame=frame)
+            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s + 1, batch=batch)
         else:
-            frame.done = t
-            self._completed += 1
-            if frame.produced and self.model is not None:
-                sinks = self.model.graph.sinks()
-                self._outputs[frame.fid] = {k: frame.produced[k]
-                                            for k in sinks}
+            sinks = (self.model.graph.sinks() if self.model is not None
+                     else ())
+            for frame in batch.frames:
+                frame.done = t
+                self._completed += 1
+                out = None
+                if frame.produced and self.model is not None:
+                    out = {k: frame.produced[k] for k in sinks}
+                    self._outputs[frame.fid] = out
+                if self.on_complete is not None:
+                    self.on_complete(frame, t, out)
         if self._draining:
             if self._all_idle():
                 self._do_replan(t)
@@ -411,8 +612,13 @@ class PipelineRuntime:
                     if st.pending is not None:
                         st.pending.cancelled = True
                         st.pending = None
-                    st.active.restarts += 1
-                    st.queue.appendleft(st.active)
+                    for fr in st.active.frames:
+                        fr.restarts += 1
+                    if st.index == 0:
+                        for fr in reversed(st.active.frames):
+                            st.queue.appendleft(fr)
+                    else:
+                        st.queue.appendleft(st.active)
                     st.active = None
                     aborted.append(st.index)
             if not self.pool.live():
@@ -495,7 +701,9 @@ class PipelineRuntime:
         """
         frames: list[Frame] = []
         for st in self.stages:
-            frames.extend(st.queue)
+            for item in st.queue:
+                frames.extend([item] if isinstance(item, Frame)
+                              else item.frames)
             st.queue.clear()
         frames.sort(key=lambda f: (f.next_piece == 0, f.fid))
         return frames
@@ -506,7 +714,11 @@ class PipelineRuntime:
         self._draining = False
         for frame in inflight:
             s = self._stage_for_piece(frame.next_piece)
-            self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s, frame=frame)
+            if s == 0:
+                self.q.push(t, EventKind.FRAME_ARRIVAL, stage=0, frame=frame)
+            else:
+                self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s,
+                            batch=_Batch([frame]))
         if self.config.trace:
             self._trace.append((t, "migrated", len(inflight)))
         if self._deferred_replan is not None:
@@ -543,6 +755,7 @@ class PipelineRuntime:
             replans=list(self.replans),
             completions=done,
             restarts=sum(f.restarts for f in self._all_frames),
+            dropped=self._dropped,
             outputs=self._outputs,
             trace=list(self._trace),
         )

@@ -1,7 +1,17 @@
-"""Serving: pipelined CNN inference server + LM decode loop."""
+"""Serving: pipelined CNN inference servers, the multi-tenant
+asynchronous scheduler, and the LM decode loop."""
 
 from .server import PipelineServer, ServeStats, StreamingPipelineServer
+from .queueing import (OpenLoopGenerator, TenantQueue, WeightedArbiter,
+                       coalesce)
+from .scheduler import (RepartitionRecord, SchedulerConfig, ServeReport,
+                        ServingScheduler, TenantConfig, TenantJoin,
+                        TenantLeave, serve_time_sliced)
 from .lm import generate
 
 __all__ = ["PipelineServer", "ServeStats", "StreamingPipelineServer",
+           "OpenLoopGenerator", "TenantQueue", "WeightedArbiter", "coalesce",
+           "RepartitionRecord", "SchedulerConfig", "ServeReport",
+           "ServingScheduler", "TenantConfig", "TenantJoin", "TenantLeave",
+           "serve_time_sliced",
            "generate"]

@@ -17,8 +17,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
-from ..core import Cluster, plan, simulate
-from ..core.pipeline_dp import PipelinePlan
+from ..core import Cluster, plan
 from ..models.cnn.builder import CNNDef
 from ..pipeline.runner import PipelineRunner
 from ..data.pipeline import Request
@@ -26,15 +25,72 @@ from ..data.pipeline import Request
 
 @dataclass
 class ServeStats:
+    """Shared serving accounting: every server front-end (closed-form
+    replay, runtime-backed streaming, multi-tenant scheduler) records
+    per-request completions through :meth:`record` instead of keeping
+    its own accumulation loop."""
+
     served: int = 0
     total_latency_model_s: float = 0.0
     period_model_s: float = 0.0
     wall_s: float = 0.0
     per_request: list = field(default_factory=list)
+    # admission / SLO accounting (multi-tenant scheduler)
+    rejected: int = 0           # refused at admission (queue full)
+    expired: int = 0            # deadline passed while still queued
+    deadline_misses: int = 0    # served, but past the deadline
+
+    def record(self, latency_s: float, missed_deadline: bool = False) -> None:
+        """Account one served request."""
+        self.served += 1
+        self.total_latency_model_s += latency_s
+        self.per_request.append(latency_s)
+        if missed_deadline:
+            self.deadline_misses += 1
+
+    @property
+    def offered(self) -> int:
+        return self.served + self.rejected + self.expired
 
     @property
     def model_throughput_per_min(self) -> float:
-        return 60.0 / self.period_model_s if self.period_model_s else 0.0
+        """Steady-state throughput from the modeled pipeline period;
+        robust to zero-duration serves (empty streams, single-request
+        serves, degenerate plans) instead of dividing by zero."""
+        if self.period_model_s and self.period_model_s > 0.0:
+            return 60.0 / self.period_model_s
+        return 0.0
+
+    @property
+    def mean_latency_s(self) -> float:
+        return (self.total_latency_model_s / self.served
+                if self.served else 0.0)
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.per_request:
+            return 0.0
+        return float(np.percentile(np.asarray(self.per_request), q))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p95_latency_s(self) -> float:
+        return self.latency_percentile(95.0)
+
+    @property
+    def p99_latency_s(self) -> float:
+        return self.latency_percentile(99.0)
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        """Fraction of admitted requests that blew their deadline —
+        expired-in-queue requests count as misses too."""
+        admitted = self.served + self.expired
+        if not admitted:
+            return 0.0
+        return (self.deadline_misses + self.expired) / admitted
 
 
 class PipelineServer:
@@ -79,10 +135,7 @@ class PipelineServer:
                 produced.update(outs)
             sinks = self.model.graph.sinks()
             outputs.append({k: produced[k] for k in sinks})
-            stats.served += 1
-            lat = finish[i][-1] - req.arrival
-            stats.total_latency_model_s += lat
-            stats.per_request.append(lat)
+            stats.record(finish[i][-1] - req.arrival)
         stats.wall_s = time.perf_counter() - t0
         return outputs, stats
 
@@ -130,14 +183,12 @@ class StreamingPipelineServer:
         rep = rt.run(inputs=[requests[i].payload for i in order],
                      arrivals=[requests[i].arrival for i in order])
         done_at = {fid: done for fid, _, done in rep.completions}
-        stats = ServeStats(served=rep.completed,
-                           period_model_s=rep.period)
+        stats = ServeStats(period_model_s=rep.period)
         outputs = [{} for _ in requests]
-        stats.per_request = [0.0] * len(requests)
-        for fid, orig in enumerate(order):
+        fid_of = {orig: fid for fid, orig in enumerate(order)}
+        for orig, req in enumerate(requests):
+            fid = fid_of[orig]
             outputs[orig] = rep.outputs.get(fid, {})
-            lat = max(0.0, done_at[fid] - requests[orig].arrival)
-            stats.per_request[orig] = lat
-            stats.total_latency_model_s += lat
+            stats.record(max(0.0, done_at[fid] - req.arrival))
         stats.wall_s = time.perf_counter() - t0
         return outputs, stats

@@ -1,0 +1,119 @@
+"""Bench-regression gate: metric parsing and the regression check,
+including the required injected-25%-regression failure."""
+
+import json
+
+import pytest
+
+from benchmarks.run import parse_metrics
+from tools.bench_gate import check, main
+
+
+BASELINE = {
+    "threshold": 0.2,
+    "metrics": {
+        "exec/vgg16_stage_compiled.speedup": {"value": 2.5,
+                                              "direction": "higher"},
+        "serving_mt.throughput_ratio": {"value": 2.0, "direction": "higher"},
+        "serving_mt.dropped_inflight": {"value": 0.0, "direction": "lower"},
+    },
+}
+
+
+def _measured(**overrides):
+    m = {"exec/vgg16_stage_compiled.speedup": 2.5,
+         "serving_mt.throughput_ratio": 2.0,
+         "serving_mt.dropped_inflight": 0.0}
+    m.update(overrides)
+    return {"metrics": m}
+
+
+def test_gate_passes_at_baseline():
+    assert check(_measured(), BASELINE) == []
+
+
+def test_gate_tolerates_small_regression_and_improvement():
+    ok = _measured(**{"exec/vgg16_stage_compiled.speedup": 2.1,
+                      "serving_mt.throughput_ratio": 3.5})
+    assert check(ok, BASELINE) == []
+
+
+def test_gate_fails_on_25pct_regression():
+    bad = _measured(**{"serving_mt.throughput_ratio": 2.0 * 0.75})
+    failures = check(bad, BASELINE)
+    assert len(failures) == 1
+    assert "serving_mt.throughput_ratio" in failures[0]
+
+
+def test_gate_fails_lower_is_better_increase():
+    bad = _measured(**{"serving_mt.dropped_inflight": 3.0})
+    failures = check(bad, BASELINE)
+    assert any("dropped_inflight" in f for f in failures)
+
+
+def test_gate_fails_on_missing_metric():
+    measured = {"metrics": {"serving_mt.throughput_ratio": 2.0,
+                            "serving_mt.dropped_inflight": 0.0}}
+    failures = check(measured, BASELINE)
+    assert any("missing" in f for f in failures)
+
+
+def test_gate_threshold_override():
+    slightly_off = _measured(**{"serving_mt.throughput_ratio": 1.9})
+    assert check(slightly_off, BASELINE) == []
+    assert check(slightly_off, BASELINE, threshold=0.01) != []
+
+
+def test_gate_hard_floor_overrides_relative_slack():
+    base = {"threshold": 0.2,
+            "metrics": {"serving_mt.churn_recovery":
+                        {"value": 1.13, "direction": "higher",
+                         "min": 0.95}}}
+    # 0.96 is a >15% regression but above the floor and within 20%
+    assert check({"metrics": {"serving_mt.churn_recovery": 0.96}},
+                 base) == []
+    # 0.91 survives the relative threshold (1.13 * 0.8 = 0.904) but
+    # violates the hard acceptance bar
+    failures = check({"metrics": {"serving_mt.churn_recovery": 0.91}}, base)
+    assert any("hard floor" in f for f in failures)
+
+
+def test_gate_hard_ceiling_on_counts():
+    base = {"metrics": {"serving_mt.dropped_inflight":
+                        {"value": 0.0, "direction": "lower", "max": 0.0}}}
+    assert check({"metrics": {"serving_mt.dropped_inflight": 0.0}},
+                 base) == []
+    failures = check({"metrics": {"serving_mt.dropped_inflight": 1.0}},
+                     base)
+    assert failures
+
+
+def test_gate_rejects_bad_direction():
+    with pytest.raises(ValueError):
+        check(_measured(), {"metrics": {"x": {"value": 1,
+                                              "direction": "sideways"}}})
+
+
+def test_main_exit_codes(tmp_path):
+    meas = tmp_path / "m.json"
+    base = tmp_path / "b.json"
+    base.write_text(json.dumps(BASELINE))
+    meas.write_text(json.dumps(_measured()))
+    assert main([str(meas), "--baseline", str(base)]) == 0
+    # inject a 25% regression on a gated ratio -> exit 1
+    meas.write_text(json.dumps(
+        _measured(**{"exec/vgg16_stage_compiled.speedup": 2.5 * 0.75})))
+    assert main([str(meas), "--baseline", str(base)]) == 1
+
+
+def test_parse_metrics_flattens_rows():
+    rows = ["exec/vgg16_stage_compiled,123.4,speedup=2.31;cache_hits=5",
+            "serving_mt.throughput_ratio,99.0,1.948",
+            "table4,10.0,pieces=7;note=fused"]
+    m = parse_metrics(rows)
+    assert m["exec/vgg16_stage_compiled.us"] == pytest.approx(123.4)
+    assert m["exec/vgg16_stage_compiled.speedup"] == pytest.approx(2.31)
+    assert m["exec/vgg16_stage_compiled.cache_hits"] == 5
+    assert m["serving_mt.throughput_ratio"] == pytest.approx(1.948)
+    assert m["table4.pieces"] == 7
+    assert "table4.note" not in m         # non-numeric derived fields skipped

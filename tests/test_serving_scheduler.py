@@ -1,0 +1,295 @@
+"""Multi-tenant serving scheduler: cluster partitioning, end-to-end
+serving with admission/deadlines/batching, churn-driven re-partitioning
+and the time-sliced baseline."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_pi_cluster, partition_cluster, plan
+from repro.data.pipeline import Request
+from repro.models.cnn import zoo
+from repro.runtime import (DeviceLeave, PipelineRuntime, RuntimeConfig)
+from repro.serving import (OpenLoopGenerator, SchedulerConfig, ServingScheduler,
+                           TenantConfig, TenantJoin, TenantLeave,
+                           serve_time_sliced)
+
+
+def _sq(size=(96, 96), scale=0.1):
+    return zoo.squeezenet(input_size=size, scale=scale)
+
+
+def _models3():
+    return [_sq(), zoo.mobilenetv3(input_size=(96, 96), scale=0.25),
+            zoo.resnet34(input_size=(96, 96), scale=0.1)]
+
+
+# ---------------------------------------------------------------------------
+# partition_cluster
+# ---------------------------------------------------------------------------
+
+def test_partition_covers_devices_exactly_once():
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 1.0, 0.8])
+    part = partition_cluster(_models3(), cluster)
+    names = [d.name for s in part.shares for d in s.cluster.devices]
+    assert sorted(names) == sorted(d.name for d in cluster.devices)
+    assert all(len(s.cluster.devices) >= 1 for s in part.shares)
+    # every sub-cluster got a valid plan using all its devices
+    for s in part.shares:
+        used = [d.name for st in s.pico.pipeline.stages for d in st.devices]
+        assert sorted(used) == sorted(d.name for d in s.cluster.devices)
+
+
+def test_partition_weight_monotonicity():
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 1.0, 0.8, 0.8])
+    m = [_sq(), _sq()]
+    heavy = partition_cluster(m, cluster, weights=[4.0, 1.0])
+    assert heavy.shares[0].capacity > heavy.shares[1].capacity
+    equal = partition_cluster(m, cluster, weights=[1.0, 1.0])
+    ratio_heavy = heavy.shares[0].capacity / heavy.shares[1].capacity
+    ratio_equal = equal.shares[0].capacity / equal.shares[1].capacity
+    assert ratio_heavy > ratio_equal
+
+
+def test_partition_needs_a_device_per_model():
+    cluster = make_pi_cluster([1.0, 1.0])
+    with pytest.raises(ValueError):
+        partition_cluster(_models3(), cluster)
+    with pytest.raises(ValueError):
+        partition_cluster([_sq()], cluster, weights=[0.0])
+
+
+def test_partition_replan_reuses_piece_chain():
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    m = [_sq(), _sq()]
+    first = partition_cluster(m, cluster)
+    again = partition_cluster(m, cluster,
+                              prev=[s.pico for s in first.shares])
+    for a, b in zip(first.shares, again.shares):
+        assert [p.nodes for p in a.pico.partition.pieces] \
+            == [p.nodes for p in b.pico.partition.pieces]
+        assert b.pico.period == pytest.approx(a.pico.period)
+
+
+# ---------------------------------------------------------------------------
+# runtime micro-batching (the scheduler's execution substrate)
+# ---------------------------------------------------------------------------
+
+def test_runtime_microbatch_numerics_match_forward():
+    m = zoo.squeezenet(input_size=(64, 64), scale=0.1)
+    cluster = make_pi_cluster([1.5, 1.0, 0.8])
+    params = m.init(jax.random.PRNGKey(0))
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (1, 64, 64, 3))
+          for i in range(5)]
+    rt = PipelineRuntime(model=m, params=params, cluster=cluster,
+                         config=RuntimeConfig(max_batch=3))
+    rep = rt.run(inputs=xs)
+    assert rep.completed == 5
+    for i, x in enumerate(xs):
+        ref = m.forward(params, x)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(rep.outputs[i][k]),
+                                       np.asarray(ref[k]),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_runtime_batching_amortizes_link_latency():
+    m = _sq()
+    cluster = make_pi_cluster([1.2, 1.0, 0.8])
+    pico = plan(m.graph, cluster, m.input_size)
+    cfg = dict(inter_stage_bandwidth=50e6 / 8, link_latency_s=2e-3)
+    solo = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                           config=RuntimeConfig(max_batch=1, **cfg)).run(24)
+    batched = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
+                              config=RuntimeConfig(max_batch=6, **cfg)).run(24)
+    assert batched.completed == solo.completed == 24
+    # per-batch link latency is paid once per batch instead of per frame
+    assert batched.makespan < solo.makespan
+
+
+def test_runtime_deadline_drops_queued_frames():
+    m = _sq()
+    cluster = make_pi_cluster([1.0])
+    pico = plan(m.graph, cluster, m.input_size)
+    rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico)
+    rt.begin_stream()
+    from repro.runtime.executor import Frame
+    # a burst of simultaneous frames on a single device: later ones
+    # expire in the queue before their turn
+    for i in range(8):
+        rt.admit(Frame(i, arrival=0.0, deadline=2.5 * pico.period))
+    while rt.step() is not None:
+        pass
+    rep = rt.report()
+    assert rep.dropped > 0
+    assert rep.completed + rep.dropped == 8
+    assert rep.completed >= 1
+
+
+# ---------------------------------------------------------------------------
+# ServingScheduler end-to-end
+# ---------------------------------------------------------------------------
+
+def _workload_for(sched, n, load, seed0=0, duration_s=None):
+    """Per-tenant Poisson streams at ``load`` x sub-pipeline capacity:
+    ``n`` requests each, or duration-matched counts when ``duration_s``
+    is given (so all tenants' traffic overlaps)."""
+    out = {}
+    for i, ts in enumerate(sched._tenants.values()):
+        rate = load / ts.share.pico.period
+        gen = OpenLoopGenerator(rate_per_s=rate, seed=seed0 + i)
+        n_i = n if duration_s is None else max(8, int(rate * duration_s))
+        out[ts.cfg.name] = gen.generate(n_i)
+    return out
+
+
+def test_scheduler_serves_all_tenants_timing_mode():
+    cluster = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
+    tenants = [TenantConfig(f"t{i}", m) for i, m in enumerate(_models3())]
+    sched = ServingScheduler(tenants, cluster)
+    rep = sched.serve(_workload_for(sched, 40, load=0.8))
+    assert rep.served == 120
+    assert rep.dropped_inflight == 0
+    for name, s in rep.tenants.items():
+        assert s.served == 40
+        assert s.rejected == 0 and s.expired == 0
+        assert s.p50_latency_s <= s.p95_latency_s <= s.p99_latency_s
+        assert all(lat >= 0 for lat in s.per_request)
+    # devices did real (virtual) work and utilization is sane
+    assert any(b > 0 for b in rep.device_busy_s.values())
+    assert all(0 <= rep.utilization(d) <= 1 + 1e-9
+               for d in rep.device_busy_s)
+
+
+def test_scheduler_real_compute_matches_forward():
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+    m1 = zoo.squeezenet(input_size=(64, 64), scale=0.1)
+    m2 = zoo.vgg16(input_size=(64, 64), scale=0.1, head=False)
+    tenants = [TenantConfig("a", m1, max_batch=3),
+               TenantConfig("b", m2, max_batch=2)]
+    sched = ServingScheduler(tenants, cluster).load()
+
+    def payload(i):
+        return jax.random.normal(jax.random.PRNGKey(i), (1, 64, 64, 3))
+
+    wl = {"a": [Request(i, i * 1e-3, payload(i)) for i in range(5)],
+          "b": [Request(i, i * 1e-3, payload(100 + i)) for i in range(3)]}
+    rep = sched.serve(wl)
+    assert rep.served == 8 and rep.dropped_inflight == 0
+    for name, m, n, off in (("a", m1, 5, 0), ("b", m2, 3, 100)):
+        params = sched._tenants[name].params
+        for i in range(n):
+            ref = m.forward(params, payload(off + i))
+            out = rep.outputs[name][i]
+            for k in ref:
+                np.testing.assert_allclose(np.asarray(out[k]),
+                                           np.asarray(ref[k]),
+                                           rtol=2e-5, atol=2e-5)
+
+
+def test_scheduler_admission_and_deadlines():
+    cluster = make_pi_cluster([1.0, 0.8])
+    tenants = [TenantConfig("x", _sq(), slo_s=2e-3, max_queue=4,
+                            max_batch=2)]
+    sched = ServingScheduler(tenants, cluster)
+    period = sched._tenants["x"].share.pico.period
+    wl = {"x": OpenLoopGenerator(rate_per_s=3.0 / period,
+                                 seed=2).generate(80)}
+    rep = sched.serve(wl)
+    s = rep.tenants["x"]
+    assert s.rejected > 0                 # queue bound enforced
+    assert s.served + s.rejected + s.expired == 80
+    assert rep.dropped_inflight == 0      # overload drops queued, not flying
+    assert 0.0 < s.deadline_miss_rate <= 1.0
+
+
+def test_scheduler_device_churn_recovers_without_drops():
+    cluster = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
+    tenants = [TenantConfig("a", _sq()),
+               TenantConfig("b", zoo.resnet34(input_size=(96, 96),
+                                              scale=0.1))]
+    sched = ServingScheduler(tenants, cluster,
+                             config=SchedulerConfig(
+                                 seed=5, migration_bandwidth=1e9))
+    wl = _workload_for(sched, 120, load=0.6, seed0=3)
+    horizon = max(r.arrival for rs in wl.values() for r in rs)
+    rep = sched.serve(wl, churn=[DeviceLeave(0.5 * horizon, "pi7@0.8GHz")])
+    assert any(r.reason == "leave" for r in rep.repartitions)
+    assert rep.served == 240              # nothing lost across the re-split
+    assert rep.dropped_inflight == 0
+    leave = next(r for r in rep.repartitions if r.reason == "leave")
+    assert all("pi7@0.8GHz" not in devs
+               for devs in leave.assignment.values())
+
+
+def test_scheduler_load_shift_triggers_repartition():
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 1.0, 0.8, 0.8])
+    tenants = [TenantConfig("hot", _sq()), TenantConfig("cold", _sq())]
+    sched = ServingScheduler(
+        tenants, cluster,
+        config=SchedulerConfig(control_interval_s=0.05,
+                               rebalance_cooldown_s=0.1,
+                               migration_bandwidth=1e9))
+    period = sched._tenants["hot"].share.pico.period
+    # "hot" offers 10x the traffic of "cold": the EWMA shifts the split
+    wl = {"hot": OpenLoopGenerator(rate_per_s=1.5 / period,
+                                   seed=0).generate(150),
+          "cold": OpenLoopGenerator(rate_per_s=0.15 / period,
+                                    seed=1).generate(15)}
+    rep = sched.serve(wl)
+    assert rep.dropped_inflight == 0
+    loads = [r for r in rep.repartitions if r.reason == "load"]
+    assert loads, "skewed load never re-partitioned the fleet"
+    final = loads[-1].assignment
+    assert len(final["hot"]) > len(final["cold"])
+
+
+def test_scheduler_tenant_join_and_leave():
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8, 1.0, 0.8])
+    tenants = [TenantConfig("a", _sq()), TenantConfig("b", _sq())]
+    sched = ServingScheduler(tenants, cluster)
+    p = {n: ts.share.pico.period for n, ts in sched._tenants.items()}
+    wl = {"a": OpenLoopGenerator(rate_per_s=0.5 / p["a"],
+                                 seed=0).generate(60),
+          "b": OpenLoopGenerator(rate_per_s=0.5 / p["b"],
+                                 seed=1).generate(60)}
+    horizon = max(r.arrival for rs in wl.values() for r in rs)
+    churn = [TenantJoin(0.3 * horizon, TenantConfig("c", _sq())),
+             TenantLeave(0.6 * horizon, "b")]
+    rep = sched.serve(wl, churn=churn)
+    reasons = [r.reason for r in rep.repartitions]
+    assert "tenant-join" in reasons and "tenant-leave" in reasons
+    assert rep.tenants["a"].served == 60  # bystander tenant unaffected
+    b = rep.tenants["b"]
+    assert b.served + b.rejected + b.expired == 60
+    assert rep.dropped_inflight == 0
+    # after the join, c owns at least one device
+    join = next(r for r in rep.repartitions if r.reason == "tenant-join")
+    assert len(join.assignment["c"]) >= 1
+
+
+def test_scheduler_single_use():
+    cluster = make_pi_cluster([1.0, 0.8])
+    sched = ServingScheduler([TenantConfig("a", _sq())], cluster)
+    sched.serve({"a": []})
+    with pytest.raises(RuntimeError):
+        sched.serve({"a": []})
+
+
+def test_multitenant_beats_time_sliced():
+    # the benchmark's tenant mix (fig_serving_mt) in a shorter run:
+    # saturated duration-matched streams, partitioned vs time-sliced
+    cluster = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
+    models = [zoo.squeezenet(input_size=(96, 96), scale=0.5),
+              zoo.mobilenetv3(input_size=(96, 96), scale=0.5),
+              zoo.resnet34(input_size=(96, 96), scale=0.25)]
+    tenants = [TenantConfig(f"t{i}", m, max_batch=4)
+               for i, m in enumerate(models)]
+    sched = ServingScheduler(tenants, cluster)
+    wl = _workload_for(sched, 0, load=2.0, seed0=11, duration_s=0.8)
+    rep = sched.serve(wl)
+    base = serve_time_sliced(tenants, cluster, wl)
+    total = sum(len(rs) for rs in wl.values())
+    assert rep.served == base.served == total
+    assert rep.dropped_inflight == 0
+    assert rep.throughput_per_min >= 1.5 * base.throughput_per_min

@@ -1,0 +1,109 @@
+"""Bench-regression gate: compare a ``benchmarks.run --out`` JSON
+against committed baselines and fail on regressions.
+
+Usage::
+
+    python tools/bench_gate.py BENCH_smoke.json \
+        --baseline benchmarks/baselines/smoke.json [--threshold 0.2]
+
+The baseline file pins *self-normalized* metrics only (speedups,
+recovery ratios, counts) — raw wall-time numbers vary with CI hardware
+and would flap.  Each entry declares its good direction::
+
+    {"metrics": {"exec/vgg16_stage_compiled.speedup":
+                     {"value": 2.5, "direction": "higher"},
+                 "serving_mt.dropped_inflight":
+                     {"value": 0.0, "direction": "lower"}}}
+
+A ``higher`` metric fails below ``value * (1 - threshold)``; a
+``lower`` metric fails above ``value * (1 + threshold)`` (for a zero
+baseline that means any increase fails).  An entry may also pin an
+absolute ``min``/``max`` — a hard acceptance bar the relative
+threshold must not soften (e.g. churn recovery >= 0.95 regardless of
+how high the baseline sits).  A metric missing from the measured run
+fails too — silently dropping a benchmark is itself a regression.
+Exit code 1 on any failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_THRESHOLD = 0.2
+
+
+def check(measured: dict, baseline: dict,
+          threshold: float | None = None) -> list[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    thr = threshold if threshold is not None \
+        else baseline.get("threshold", DEFAULT_THRESHOLD)
+    metrics = measured.get("metrics", measured)
+    failures = []
+    for name, spec in baseline["metrics"].items():
+        base = float(spec["value"])
+        direction = spec.get("direction", "higher")
+        if direction not in ("higher", "lower"):
+            raise ValueError(f"{name}: bad direction {direction!r}")
+        got = metrics.get(name)
+        if got is None:
+            failures.append(f"{name}: missing from measured metrics")
+            continue
+        got = float(got)
+        if direction == "higher":
+            allowed = base * (1.0 - thr)
+            if got < allowed:
+                failures.append(
+                    f"{name}: {got:.4g} < {allowed:.4g} "
+                    f"(baseline {base:.4g}, higher-is-better, "
+                    f"threshold {thr:.0%})")
+        else:
+            allowed = base * (1.0 + thr)
+            if got > allowed:
+                failures.append(
+                    f"{name}: {got:.4g} > {allowed:.4g} "
+                    f"(baseline {base:.4g}, lower-is-better, "
+                    f"threshold {thr:.0%})")
+        if "min" in spec and got < float(spec["min"]):
+            failures.append(f"{name}: {got:.4g} below hard floor "
+                            f"{float(spec['min']):.4g}")
+        if "max" in spec and got > float(spec["max"]):
+            failures.append(f"{name}: {got:.4g} above hard ceiling "
+                            f"{float(spec['max']):.4g}")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("measured", help="JSON from benchmarks.run --out")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help=f"relative regression allowance (default: "
+                         f"baseline file's, else {DEFAULT_THRESHOLD})")
+    args = ap.parse_args(argv)
+
+    with open(args.measured) as fh:
+        measured = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    failures = check(measured, baseline, args.threshold)
+    metrics = measured.get("metrics", measured)
+    for name, spec in baseline["metrics"].items():
+        got = metrics.get(name)
+        status = "MISS" if got is None else f"{float(got):.4g}"
+        print(f"  {name}: measured={status} baseline={spec['value']} "
+              f"({spec.get('direction', 'higher')})")
+    if failures:
+        print(f"\nBENCH GATE FAILED ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
