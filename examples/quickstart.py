@@ -1,5 +1,6 @@
-"""Quickstart: plan a PICO pipeline for InceptionV3 on a heterogeneous
-cluster, execute it, and verify it matches the monolithic network.
+"""Quickstart: compile a PICO deployment for InceptionV3 on a
+heterogeneous cluster, execute it, verify it matches the monolithic
+network, and round-trip the plan artifact through JSON.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,9 +8,9 @@ cluster, execute it, and verify it matches the monolithic network.
 import jax
 import numpy as np
 
-from repro.core import make_pi_cluster, plan, simulate
+import repro
+from repro.core import make_pi_cluster
 from repro.models.cnn import zoo
-from repro.pipeline import PipelineRunner
 
 # 1. A CNN with a non-trivial (block) structure, scaled for CPU demo
 model = zoo.inceptionv3(input_size=(128, 128), scale=0.25)
@@ -19,32 +20,34 @@ print(f"model: {model.name}  vertices={len(model.graph.layers)} "
 # 2. A heterogeneous edge cluster: 4 Raspberry-Pis at mixed frequencies
 cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8])
 
-# 3. Two-step PICO optimization: Alg.1 (graph -> pieces), Alg.2+3
-#    (pieces x devices -> pipeline stages)
-pico = plan(model.graph, cluster, model.input_size)
-print(f"pieces: {len(pico.partition.pieces)} "
-      f"(worst piece redundancy {pico.partition.objective:.3g} FLOPs)")
-for st in pico.pipeline.stages:
-    print(f"  stage pieces {st.first_piece}-{st.last_piece} on "
-          f"{[d.name for d in st.devices]}  T={st.cost.total*1e3:.1f} ms "
-          f"(comp {st.cost.t_comp*1e3:.1f} + comm {st.cost.t_comm*1e3:.1f})")
-print(f"period {pico.period*1e3:.1f} ms -> "
-      f"throughput {60/pico.period:.1f} frames/min; "
-      f"latency {pico.latency*1e3:.1f} ms")
+# 3. One call owns the two-step PICO optimization: Alg.1 (graph ->
+#    pieces), Alg.2+3 (pieces x devices -> pipeline stages)
+dep = repro.compile(model, cluster)
+print(f"pieces: {len(dep.partition.pieces)} "
+      f"(worst piece redundancy {dep.partition.objective:.3g} FLOPs)")
+print(dep.describe())
 
 # 4. Execute the pipeline and check bit-exactness vs the monolithic net
-params = model.init(jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 128, 3))
-ref = model.forward(params, x)
-out = PipelineRunner(model, pico.pipeline)(params, x)
+ref = model.forward(dep.load_params().params, x)
+out = dep.run(x)
 for k in ref:
     np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
                                rtol=1e-5, atol=1e-5)
 print("pipelined execution matches monolithic forward exactly ✓")
 
 # 5. Steady-state runtime metrics (paper Table 5 quantities)
-rep = simulate(pico.pipeline, frames=32)
+rep = dep.simulate(frames=32)
 print(f"simulated: throughput {rep.throughput_per_min:.1f}/min, "
       f"avg util {rep.avg_utilization:.2f}, "
       f"avg redundancy {rep.avg_redundancy:.3f}, "
       f"avg mem {rep.avg_memory/1e6:.1f} MB")
+
+# 6. The plan is a durable artifact: save, reload (no re-planning, no
+#    re-calibration), and get bit-identical behavior back
+path = dep.save("/tmp/quickstart_plan.json")
+dep2 = repro.Deployment.load(path)
+out2 = dep2.run(x)
+for k in out:
+    np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(out2[k]))
+print(f"artifact round-trip ({path}) is bit-identical ✓")

@@ -13,23 +13,24 @@ runtime while the cluster degrades and recovers around it:
 Run:  PYTHONPATH=src python examples/runtime_churn.py
 """
 
-from repro.core import Device, make_pi_cluster, plan
+import repro
+from repro.core import Device, make_pi_cluster
 from repro.models.cnn import zoo
 from repro.runtime import (DeviceJoin, DeviceLeave, FreqScale, LinkDegrade,
-                           PipelineRuntime, RuntimeConfig, validate)
+                           validate)
 
 
 def main():
     m = zoo.vgg16(input_size=(224, 224), scale=0.25)
     cluster = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
-    pico = plan(m.graph, cluster, m.input_size)
-    P = pico.period
+    dep = repro.compile(m, cluster)
+    P = dep.period
     print(f"model {m.name}: {len(m.graph.layers)} layers, "
-          f"{len(pico.pipeline.stages)} stages, period {P*1e3:.2f} ms, "
+          f"{len(dep.pipeline.stages)} stages, period {P*1e3:.2f} ms, "
           f"{60/P:.0f} frames/min on {len(cluster)} devices")
 
     # sanity: the event runtime reproduces the closed-form simulator
-    v = validate(m.graph, cluster, m.input_size, pico=pico, frames=32)
+    v = validate(m.graph, cluster, m.input_size, pico=dep.pico, frames=32)
     print(f"runtime vs simulator: {v}")
 
     fastest = max(cluster.devices, key=lambda d: d.capacity)
@@ -41,8 +42,8 @@ def main():
                                    active_power=6.25, idle_power=1.6)),
         LinkDegrade(200 * P, 2.0),
     ]
-    rt = PipelineRuntime(m.graph, cluster, m.input_size, pico=pico,
-                         config=RuntimeConfig(seed=0), churn=churn)
+    rt = dep.runtime(repro.DeploySpec(seed=0), churn=churn,
+                     real_compute=False)
     rep = rt.run(240)
 
     print(f"\ncompleted {rep.completed}/{rep.frames} frames in "

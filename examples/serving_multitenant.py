@@ -6,6 +6,7 @@ and a device dropping out mid-traffic.
     PYTHONPATH=src python examples/serving_multitenant.py
 """
 
+from repro.api import ExecSpec, PlanSpec
 from repro.core import make_pi_cluster
 from repro.models.cnn import zoo
 from repro.runtime import DeviceLeave
@@ -15,10 +16,12 @@ from repro.serving import (OpenLoopGenerator, SchedulerConfig,
 cluster = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
 
 # three tenants: weight = device entitlement, slo_s = per-request
-# deadline, max_queue = admission bound, max_batch = stage-0 coalescing
+# deadline, max_queue = admission bound, max_batch = stage-0 coalescing;
+# per-tenant planner knobs ride in a PlanSpec
 tenants = [
     TenantConfig("detector", zoo.squeezenet(input_size=(96, 96), scale=0.5),
-                 weight=2.0, slo_s=0.5, max_queue=64, max_batch=4),
+                 weight=2.0, slo_s=0.5, max_queue=64, max_batch=4,
+                 plan_spec=PlanSpec()),
     TenantConfig("classifier", zoo.mobilenetv3(input_size=(96, 96),
                                                scale=0.5),
                  weight=1.0, slo_s=1.0, max_queue=64, max_batch=4),
@@ -27,10 +30,12 @@ tenants = [
 ]
 
 # params are pre-staged on every device, so re-partitions pay a fast
-# local reload instead of a WLAN push
+# local reload instead of a WLAN push; the execution backend is one
+# ExecSpec shared by every tenant pipeline
 sched = ServingScheduler(tenants, cluster,
                          config=SchedulerConfig(seed=0,
-                                                migration_bandwidth=1e9))
+                                                migration_bandwidth=1e9),
+                         exec_spec=ExecSpec())
 print("initial device split:")
 for name, devs in {ts.cfg.name: [d.name for d in ts.share.cluster.devices]
                    for ts in sched._tenants.values()}.items():

@@ -1,0 +1,31 @@
+"""PICO reproduction — pipelined CNN inference on heterogeneous clusters.
+
+Public API (the ``repro.api`` facade):
+
+    import repro
+    dep = repro.compile(model, cluster,
+                        repro.PlanSpec(t_lim=0.5),
+                        repro.ExecSpec(backend="xla", calibrate=True))
+    dep.run(frames); dep.save("plan.json")
+    dep = repro.Deployment.load("plan.json")     # no re-plan, no re-calib
+
+Subsystems (``repro.core``, ``repro.exec``, ``repro.runtime``,
+``repro.serving``, ``repro.models``, ...) import on demand; nothing
+heavyweight loads at package import time.
+"""
+
+from .api._compat import lazy_exports
+
+_LAZY = {
+    "compile": ("repro.api.deployment", "compile"),
+    "Deployment": ("repro.api.deployment", "Deployment"),
+    "PlanSpec": ("repro.api.specs", "PlanSpec"),
+    "ExecSpec": ("repro.api.specs", "ExecSpec"),
+    "DeploySpec": ("repro.api.specs", "DeploySpec"),
+    "api": ("repro.api", None),
+}
+
+__all__ = ["compile", "Deployment", "PlanSpec", "ExecSpec", "DeploySpec",
+           "api"]
+
+__getattr__, __dir__ = lazy_exports(__name__, globals(), _LAZY)

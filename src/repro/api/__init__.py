@@ -1,0 +1,26 @@
+"""Public deployment facade: ``compile() -> Deployment`` plus the spec
+and artifact layers.  Re-exported at top level as ``repro.compile`` /
+``repro.Deployment`` / ``repro.PlanSpec`` / ...
+
+Only the lightweight pieces (specs, deprecation plumbing) import
+eagerly; :func:`compile`/:class:`Deployment` and the artifact codecs
+load on first touch so ``repro.core`` stays importable without JAX and
+free of import cycles.
+"""
+
+from ._compat import lazy_exports, reset_legacy_warnings
+from .specs import (SPEC_VERSION, DeploySpec, ExecSpec, PlanSpec,
+                    spec_from_dict)
+
+_LAZY = {
+    "compile": ("repro.api.deployment", "compile"),
+    "Deployment": ("repro.api.deployment", "Deployment"),
+    "artifacts": ("repro.api.artifacts", None),
+    "SCHEMA_VERSION": ("repro.api.artifacts", "SCHEMA_VERSION"),
+}
+
+__all__ = ["PlanSpec", "ExecSpec", "DeploySpec", "spec_from_dict",
+           "SPEC_VERSION", "SCHEMA_VERSION", "compile", "Deployment",
+           "artifacts", "reset_legacy_warnings"]
+
+__getattr__, __dir__ = lazy_exports(__name__, globals(), _LAZY)

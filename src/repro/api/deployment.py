@@ -1,0 +1,319 @@
+"""``repro.compile(model, cluster) -> Deployment`` — the public facade.
+
+One object owns the whole plan → calibrate → execute lifecycle that the
+paper splits into an offline optimizer and an online executor:
+
+    dep = repro.compile(model, cluster, plan_spec, exec_spec)
+    dep.run(frames)                  # bit-exact pipelined inference
+    dep.runtime(deploy_spec)         # event-driven cluster runtime
+    dep.server(streaming=True)       # serving front-end
+    dep.scheduler(tenants=[...])     # multi-tenant co-hosting
+    dep.save("plan.json")            # durable, versioned artifact
+    dep2 = repro.Deployment.load("plan.json")   # no re-plan, no re-calib
+
+``save``/``load`` round-trips are exact: the loaded deployment's
+``simulate()`` report and per-frame outputs are bit-identical to the
+original, and neither the planner nor the calibrator runs on load —
+the offline plan ships to the fleet as data.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+from ..core.cost import Cluster, CostTable
+from ..core.planner import PicoPlan, plan_with_spec
+from . import artifacts
+from .specs import DeploySpec, ExecSpec, PlanSpec
+
+
+def compile(model, cluster: Cluster,
+            plan_spec: PlanSpec | None = None,
+            exec_spec: ExecSpec | None = None, *,
+            cost_table: CostTable | None = None,
+            params=None, key=None) -> "Deployment":
+    """Plan (and optionally calibrate) ``model`` on ``cluster``.
+
+    ``model`` is a graph carrier (:class:`~repro.models.cnn.builder.CNNDef`
+    or anything with ``.graph``/``.input_size``).  With
+    ``exec_spec.calibrate`` every stage of the initial plan is timed
+    through its compiled executable and the plan is re-built on the
+    measured :class:`CostTable` (piece chain reused).  ``params``/``key``
+    seed the model weights for calibration and later ``run()`` calls;
+    ``cost_table`` supplies a previously measured table up front.
+    """
+    plan_spec = plan_spec or PlanSpec()
+    exec_spec = exec_spec or ExecSpec()
+    if params is None and key is not None:
+        params = _init_params(model, key)
+    pico = plan_with_spec(model.graph, cluster, model.input_size,
+                          plan_spec, cost_table=cost_table)
+    if exec_spec.calibrate:
+        from ..exec.calibrate import calibrate_plan
+        if params is None:
+            params = _init_params(model, key)
+        report = calibrate_plan(model, params, pico.pipeline.stages,
+                                backend=exec_spec.backend,
+                                iters=exec_spec.calibrate_iters)
+        cost_table = report.table()
+        pico = plan_with_spec(model.graph, cluster, model.input_size,
+                              plan_spec, partition=pico.partition,
+                              cost_table=cost_table)
+    return Deployment(model, cluster, plan_spec, exec_spec, pico,
+                      cost_table=cost_table, params=params)
+
+
+def _init_params(model, key=None):
+    import jax
+    return model.init(key if key is not None else jax.random.PRNGKey(0))
+
+
+@dataclass
+class Deployment:
+    """A planned (and optionally calibrated) pipeline, ready to execute,
+    serve, re-plan, or ship as a JSON artifact."""
+
+    model: object
+    cluster: Cluster
+    plan_spec: PlanSpec
+    exec_spec: ExecSpec
+    pico: PicoPlan
+    cost_table: CostTable | None = None
+    params: object = field(default=None, repr=False, compare=False)
+    _runner: object = field(default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        # the executable-cache bound is process-global; a deployment
+        # carrying one applies it the same way on compile and on load
+        self.exec_spec.apply_cache_limit()
+
+    # ---------------- plan views ----------------
+
+    @property
+    def pipeline(self):
+        return self.pico.pipeline
+
+    @property
+    def partition(self):
+        return self.pico.partition
+
+    @property
+    def period(self) -> float:
+        return self.pico.period
+
+    @property
+    def latency(self) -> float:
+        return self.pico.latency
+
+    @property
+    def throughput(self) -> float:
+        return self.pico.throughput
+
+    def describe(self) -> str:
+        """One-paragraph human summary (CLI/report helper)."""
+        st = self.pico.pipeline.stages
+        lines = [f"{getattr(self.model, 'name', 'model')}: "
+                 f"{len(self.pico.partition.pieces)} pieces -> "
+                 f"{len(st)} stages on {len(self.cluster)} devices; "
+                 f"period {self.period * 1e3:.2f} ms "
+                 f"({60.0 / self.period:.1f} frames/min), "
+                 f"latency {self.latency * 1e3:.2f} ms"]
+        for s in st:
+            lines.append(
+                f"  stage pieces {s.first_piece}-{s.last_piece} on "
+                f"{[d.name for d in s.devices]}  "
+                f"T={s.cost.total * 1e3:.2f} ms")
+        if self.cost_table is not None:
+            lines.append(f"  calibrated: {len(self.cost_table)} segment "
+                         f"ratio(s)")
+        return "\n".join(lines)
+
+    # ---------------- execution ----------------
+
+    def load_params(self, key=None) -> "Deployment":
+        """Initialize model weights (idempotent unless ``key`` given)."""
+        if self.params is None or key is not None:
+            self.params = _init_params(self.model, key)
+            self._runner = None
+        return self
+
+    @property
+    def runner(self):
+        """Lazy :class:`~repro.pipeline.runner.PipelineRunner` over the
+        plan's stages (compiled per ``exec_spec``)."""
+        if self._runner is None:
+            from ..pipeline.runner import PipelineRunner
+            self._runner = PipelineRunner(self.model, self.pico.pipeline,
+                                          exec_spec=self.exec_spec)
+        return self._runner
+
+    def run(self, frames, params=None):
+        """Execute frame(s) through the pipelined stages (bit-exact with
+        the monolithic forward).  A single array returns one sink dict;
+        a sequence returns a list of sink dicts.  Multi-frame sequences
+        go through the compiled ``lax.scan`` ``run_frames`` path (one
+        dispatch per stage) unless ``exec_spec.scan_batch`` is off."""
+        if params is None:
+            params = self.load_params().params
+        if hasattr(frames, "ndim"):
+            return self.runner(params, frames)
+        frames = list(frames)
+        if self.exec_spec.scan_batch and len(frames) > 1:
+            import jax.numpy as jnp
+            outs = self.runner.run_frames(params, jnp.stack(frames))
+            return [{k: v[i] for k, v in outs.items()}
+                    for i in range(len(frames))]
+        return [self.runner(params, x) for x in frames]
+
+    def simulate(self, frames: int = 64):
+        """Closed-form steady-state report for the plan (Table 5
+        quantities)."""
+        from ..core.simulate import simulate
+        return simulate(self.pico.pipeline, frames, cluster=self.cluster)
+
+    # ---------------- online forms ----------------
+
+    def runtime(self, deploy_spec: DeploySpec | None = None, *,
+                churn: Sequence = (), real_compute: bool | None = None):
+        """Event-driven cluster runtime over this plan (no re-planning).
+
+        ``real_compute`` defaults to "yes iff params are loaded"; pass
+        ``False`` for a timing-only run on a deployment that has
+        weights."""
+        from ..runtime.executor import PipelineRuntime
+        spec = deploy_spec or DeploySpec()
+        real = (self.params is not None if real_compute is None
+                else real_compute)
+        if real and self.params is None:
+            self.load_params()
+        kw = dict(cluster=self.cluster, pico=self.pico,
+                  config=spec.to_runtime_config(), churn=churn,
+                  plan_spec=self.plan_spec, exec_spec=self.exec_spec,
+                  cost_table=self.cost_table)
+        if real:
+            return PipelineRuntime(model=self.model, params=self.params,
+                                   **kw)
+        return PipelineRuntime(g=self.model.graph,
+                               input_size=self.model.input_size, **kw)
+
+    def server(self, deploy_spec: DeploySpec | None = None, *,
+               streaming: bool = False, churn: Sequence = ()):
+        """Serving front-end over this plan: the closed-form
+        :class:`~repro.serving.server.PipelineServer`, or (with
+        ``streaming=True``) the runtime-backed streaming server."""
+        from ..serving.server import PipelineServer, StreamingPipelineServer
+        if streaming:
+            spec = deploy_spec or DeploySpec()
+            srv = StreamingPipelineServer(
+                self.model, self.cluster, deploy_spec=spec, churn=churn,
+                plan_spec=self.plan_spec, exec_spec=self.exec_spec,
+                cost_table=self.cost_table, pico=self.pico)
+        else:
+            if deploy_spec is not None:
+                raise TypeError("deploy_spec applies to the runtime-backed "
+                                "server; pass streaming=True (the "
+                                "closed-form PipelineServer has no deploy "
+                                "knobs)")
+            if churn:
+                raise TypeError("churn applies to the runtime-backed "
+                                "server; pass streaming=True")
+            srv = PipelineServer(
+                self.model, self.cluster, plan_spec=self.plan_spec,
+                exec_spec=self.exec_spec, cost_table=self.cost_table,
+                pico=self.pico)
+        if self.params is not None:
+            srv.params = self.params
+        return srv
+
+    def scheduler(self, tenants: Sequence, config=None):
+        """Multi-tenant scheduler co-hosting ``tenants``
+        (:class:`~repro.serving.scheduler.TenantConfig`) on this
+        deployment's cluster, inheriting its exec spec and cost table."""
+        from ..serving.scheduler import ServingScheduler
+        return ServingScheduler(tenants, self.cluster, config=config,
+                                exec_spec=self.exec_spec,
+                                cost_table=self.cost_table)
+
+    def replan(self, cluster: Cluster) -> "Deployment":
+        """Re-plan onto a changed cluster, reusing Algorithm 1's piece
+        chain and any measured cost table (the runtime feedback loop as
+        a pure function: old deployment + new cluster -> new one)."""
+        pico = plan_with_spec(self.model.graph, cluster,
+                              self.model.input_size, self.plan_spec,
+                              partition=self.pico.partition,
+                              cost_table=self.cost_table)
+        return Deployment(self.model, cluster, self.plan_spec,
+                          self.exec_spec, pico, cost_table=self.cost_table,
+                          params=self.params)
+
+    # ---------------- persistence ----------------
+
+    def _payload(self) -> dict:
+        return {
+            "plan_spec": self.plan_spec.to_dict(),
+            "exec_spec": self.exec_spec.to_dict(),
+            "model": artifacts.model_to_dict(self.model),
+            "cluster": artifacts.cluster_to_dict(self.cluster),
+            "pico": artifacts.plan_to_dict(self.pico),
+            "cost_table": (None if self.cost_table is None
+                           else artifacts.cost_table_to_dict(self.cost_table)),
+        }
+
+    def to_dict(self) -> dict:
+        return artifacts.envelope("deployment", self._payload())
+
+    @classmethod
+    def _from_payload(cls, p: Mapping, model=None, params=None
+                      ) -> "Deployment":
+        return cls(
+            model if model is not None else artifacts.model_from_dict(
+                p["model"]),
+            artifacts.cluster_from_dict(p["cluster"]),
+            PlanSpec.from_dict(p["plan_spec"]),
+            ExecSpec.from_dict(p["exec_spec"]),
+            artifacts.plan_from_dict(p["pico"]),
+            cost_table=(None if p.get("cost_table") is None
+                        else artifacts.cost_table_from_dict(p["cost_table"])),
+            params=params)
+
+    @classmethod
+    def from_dict(cls, d: Mapping, model=None, params=None) -> "Deployment":
+        return cls._from_payload(artifacts.open_envelope(d, "deployment"),
+                                 model=model, params=params)
+
+    def to_json(self, **dump_kw) -> str:
+        return artifacts.dumps_payload("deployment", self._payload(),
+                                       **dump_kw)
+
+    @classmethod
+    def from_json(cls, s: str, model=None, params=None) -> "Deployment":
+        return cls._from_payload(artifacts.loads_payload("deployment", s),
+                                 model=model, params=params)
+
+    def save(self, path: str | os.PathLike) -> str:
+        """Write the deployment artifact (plan + specs + model def +
+        cluster + cost table) as versioned JSON; returns the path.
+
+        Model *weights* are deliberately not part of the artifact —
+        the plan ships as data, weights ship as checkpoints.  Default
+        weights reproduce exactly on load (``init`` is deterministic in
+        the serialized graph + PRNG key); trained weights must be
+        reattached via ``Deployment.load(path, params=...)``."""
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+            f.write("\n")
+        return os.fspath(path)
+
+    @classmethod
+    def load(cls, path: str | os.PathLike, model=None,
+             params=None) -> "Deployment":
+        """Rebuild a deployment from :meth:`save` output.  Neither the
+        planner nor the calibrator runs — the plan, its measured cost
+        table, and the model definition all come from the artifact.
+        Pass ``model=`` to attach an existing model object instead of
+        rebuilding one from the serialized graph, and ``params=`` to
+        reattach trained weights (see :meth:`save`)."""
+        with open(path) as f:
+            return cls.from_json(f.read(), model=model, params=params)

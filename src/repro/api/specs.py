@@ -1,0 +1,249 @@
+"""Frozen configuration specs for the ``repro.api`` facade.
+
+One declarative config surface replacing the ``(t_lim, backend,
+n_split, dnc_threshold, max_diameter, ...)`` kwarg sprawl that every
+entry point used to re-thread:
+
+* :class:`PlanSpec`   — the offline optimizer (Algorithms 1-3) knobs;
+* :class:`ExecSpec`   — how plans lower to executables (backend,
+  compile mode, donation, scan batching, cache limits, calibration);
+* :class:`DeploySpec` — the online runtime/serving knobs (batching,
+  link realism, churn/drift re-planning policy).
+
+All three are frozen dataclasses with eager validation and an exact
+JSON round-trip (``to_json``/``from_json``); non-finite floats are
+encoded as the strings ``"Infinity"``/``"-Infinity"`` so the payloads
+stay strict-JSON parseable.  The module deliberately imports nothing
+heavyweight — specs are safe to build in a CLI before JAX loads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass
+
+SPEC_VERSION = 1
+
+_EXEC_MODES = ("compiled", "eager")
+
+
+def encode_float(v):
+    """JSON-safe float: non-finite values become their string spelling
+    (``"Infinity"``/``"-Infinity"``/``"NaN"``) so documents stay
+    strict-JSON parseable."""
+    if isinstance(v, float) and not math.isfinite(v):
+        if math.isnan(v):
+            return "NaN"
+        return "Infinity" if v > 0 else "-Infinity"
+    return v
+
+
+def decode_float(v):
+    if v == "Infinity":
+        return float("inf")
+    if v == "-Infinity":
+        return float("-inf")
+    if v == "NaN":
+        return float("nan")
+    return v
+
+
+class _SpecBase:
+    """Shared (de)serialization for the frozen spec dataclasses."""
+
+    def to_dict(self) -> dict:
+        """Plain payload dict (raw float values — non-finite floats are
+        spelled out only at JSON-encode time, by :meth:`to_json` or the
+        enclosing artifact encoder)."""
+        out = {"kind": type(self).__name__, "version": SPEC_VERSION}
+        for f in dataclasses.fields(self):
+            out[f.name] = getattr(self, f.name)
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "_SpecBase":
+        d = dict(d)
+        kind = d.pop("kind", cls.__name__)
+        if kind != cls.__name__:
+            raise ValueError(f"expected a {cls.__name__} payload, got {kind!r}")
+        version = d.pop("version", SPEC_VERSION)
+        if not isinstance(version, int):
+            raise ValueError(f"{cls.__name__} payload version must be an "
+                             f"integer, got {version!r}")
+        if version > SPEC_VERSION:
+            raise ValueError(f"{cls.__name__} payload version {version} is "
+                             f"newer than supported {SPEC_VERSION}")
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"unknown {cls.__name__} fields: {sorted(unknown)}")
+        return cls(**{k: decode_float(v) for k, v in d.items()})
+
+    def to_json(self, **dump_kw) -> str:
+        dump_kw.setdefault("sort_keys", True)
+        return json.dumps({k: encode_float(v)
+                           for k, v in self.to_dict().items()}, **dump_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "_SpecBase":
+        return cls.from_dict(json.loads(s))
+
+    def replace(self, **changes) -> "_SpecBase":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class PlanSpec(_SpecBase):
+    """Offline-planner configuration (Algorithm 1 + 2 + 3 knobs).
+
+    ``n_split`` is the reference tiling for Algorithm 1's C(M); ``None``
+    defers to ``max(2, len(cluster))`` at plan time.  Graphs with more
+    than ``dnc_threshold`` vertices use the divide-and-conquer
+    partitioner.  ``t_lim`` is the paper's soft latency budget.
+    """
+
+    t_lim: float = float("inf")
+    max_diameter: int = 5
+    n_split: int | None = None
+    dnc_threshold: int = 120
+
+    def __post_init__(self):
+        if not self.t_lim > 0:
+            raise ValueError(f"t_lim must be > 0, got {self.t_lim}")
+        if self.max_diameter < 1:
+            raise ValueError(f"max_diameter must be >= 1, "
+                             f"got {self.max_diameter}")
+        if self.n_split is not None and self.n_split < 2:
+            raise ValueError(f"n_split must be None or >= 2, "
+                             f"got {self.n_split}")
+        if self.dnc_threshold < 1:
+            raise ValueError(f"dnc_threshold must be >= 1, "
+                             f"got {self.dnc_threshold}")
+
+    def resolve_n_split(self, n_devices: int) -> int:
+        return self.n_split or max(2, n_devices)
+
+
+@dataclass(frozen=True)
+class ExecSpec(_SpecBase):
+    """Execution-backend configuration for compiled plans.
+
+    ``backend`` picks the conv lowering (``exec.backends`` registry;
+    ``None`` = model default).  ``mode`` selects the compiled whole-stage
+    executable or the eager per-tile oracle.  ``donate`` hands boundary
+    buffers to XLA — honored only by single-stage entry points
+    (:func:`repro.exec.compiler.compile_stage`, the exec benchmarks);
+    multi-stage runners share boundary tensors across stages, where
+    donation would corrupt later reads, so they always keep it off.
+    ``scan_batch`` routes multi-frame cohorts through the ``lax.scan``
+    ``run_frames`` path.  ``cache_size`` bounds the *process-wide*
+    executable cache (applied whenever a Deployment carrying the spec
+    is built or loaded).  ``calibrate`` makes :func:`repro.api.compile`
+    time each stage and re-plan on the measured
+    :class:`~repro.core.cost.CostTable`.
+    """
+
+    backend: str | None = None
+    mode: str = "compiled"
+    donate: bool = False
+    scan_batch: bool = True
+    cache_size: int | None = None
+    calibrate: bool = False
+    calibrate_iters: int = 3
+
+    def __post_init__(self):
+        if self.mode not in _EXEC_MODES:
+            raise ValueError(f"mode must be one of {_EXEC_MODES}, "
+                             f"got {self.mode!r}")
+        if self.cache_size is not None and self.cache_size < 1:
+            raise ValueError(f"cache_size must be None or >= 1, "
+                             f"got {self.cache_size}")
+        if self.calibrate_iters < 1:
+            raise ValueError(f"calibrate_iters must be >= 1, "
+                             f"got {self.calibrate_iters}")
+
+    def apply_cache_limit(self) -> int | None:
+        """Apply ``cache_size`` to the process-global executable cache
+        (no-op when unset).  Last-write-wins across deployments — the
+        cache is shared process state, not per-deployment.  Returns the
+        previous bound (or None if nothing was applied) so a scoped
+        caller can restore it."""
+        if self.cache_size is None:
+            return None
+        from ..exec.cache import set_cache_size
+        return set_cache_size(self.cache_size)
+
+
+@dataclass(frozen=True)
+class DeploySpec(_SpecBase):
+    """Online runtime/serving configuration (maps onto
+    :class:`~repro.runtime.executor.RuntimeConfig`).
+
+    The default is *ideal* — no jitter, no noise, free inter-stage
+    hand-off — which reproduces ``core.simulate`` exactly.
+    """
+
+    seed: int = 0
+    max_batch: int = 1
+    compute_noise: float = 0.0
+    inter_stage_bandwidth: float | None = None
+    link_latency_s: float = 0.0
+    link_jitter_s: float = 0.0
+    mem_budget_bytes: float = float("inf")
+    replan_on_churn: bool = True
+    replan_on_drift: bool = True
+    drift_threshold: float = 0.25
+    drift_cooldown: int = 24
+    ewma_beta: float = 0.3
+    migration_bandwidth: float | None = None
+    trace: bool = False
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        for name in ("compute_noise", "link_latency_s", "link_jitter_s",
+                     "drift_threshold", "drift_cooldown"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0, "
+                                 f"got {getattr(self, name)}")
+        if not 0 < self.ewma_beta <= 1:
+            raise ValueError(f"ewma_beta must be in (0, 1], "
+                             f"got {self.ewma_beta}")
+        if self.mem_budget_bytes <= 0:
+            raise ValueError(f"mem_budget_bytes must be > 0, "
+                             f"got {self.mem_budget_bytes}")
+        for name in ("inter_stage_bandwidth", "migration_bandwidth"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be None or > 0, got {v}")
+
+    def to_runtime_config(self):
+        from ..runtime.executor import RuntimeConfig
+        return RuntimeConfig(
+            seed=self.seed,
+            compute_noise=self.compute_noise,
+            inter_stage_bandwidth=self.inter_stage_bandwidth,
+            link_latency_s=self.link_latency_s,
+            link_jitter_s=self.link_jitter_s,
+            mem_budget_bytes=self.mem_budget_bytes,
+            replan_on_churn=self.replan_on_churn,
+            replan_on_drift=self.replan_on_drift,
+            drift_threshold=self.drift_threshold,
+            drift_cooldown=self.drift_cooldown,
+            ewma_beta=self.ewma_beta,
+            migration_bandwidth=self.migration_bandwidth,
+            max_batch=self.max_batch,
+            trace=self.trace)
+
+
+SPEC_KINDS = {cls.__name__: cls for cls in (PlanSpec, ExecSpec, DeploySpec)}
+
+
+def spec_from_dict(d: dict):
+    """Dispatch a spec payload to its dataclass by the ``kind`` field."""
+    kind = d.get("kind")
+    if kind not in SPEC_KINDS:
+        raise ValueError(f"unknown spec kind {kind!r}")
+    return SPEC_KINDS[kind].from_dict(d)

@@ -10,8 +10,9 @@ from .partition import (Piece, PartitionResult, partition_graph,
                         block_pieces)
 from .pipeline_dp import PipelineDP, PipelinePlan, StagePlan, plan_pipeline
 from .hetero import adjust_stages
-from .planner import (PicoPlan, plan, replan, recost, partition_cluster,
-                      split_devices, ClusterPartition, TenantShare)
+from .planner import (PicoPlan, plan, plan_with_spec, replan, recost,
+                      partition_cluster, split_devices, ClusterPartition,
+                      TenantShare)
 from .simulate import simulate, SimReport, DeviceReport
 from . import baselines
 
@@ -24,7 +25,8 @@ __all__ = [
     "Piece", "PartitionResult", "partition_graph", "partition_graph_dnc",
     "piece_redundancy", "chain_pieces", "block_pieces",
     "PipelineDP", "PipelinePlan", "StagePlan", "plan_pipeline",
-    "adjust_stages", "PicoPlan", "plan", "replan", "recost",
+    "adjust_stages", "PicoPlan", "plan", "plan_with_spec", "replan",
+    "recost",
     "partition_cluster", "split_devices", "ClusterPartition", "TenantShare",
     "simulate",
     "SimReport",

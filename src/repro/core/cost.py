@@ -68,6 +68,15 @@ class Cluster:
         devs = [Device(f"avg{i}", avg) for i in range(len(self.devices))]
         return Cluster(devs, bandwidth=self.bandwidth)
 
+    def restricted(self, devices: "Sequence[Device]") -> "Cluster":
+        """Sub-cluster over ``devices``, keeping only the pair-bandwidth
+        overrides internal to the subset (tenant shares, re-partitions)."""
+        names = {d.name for d in devices}
+        pairs = {k: v for k, v in self.pair_bandwidth.items()
+                 if k[0] in names and k[1] in names}
+        return Cluster(list(devices), bandwidth=self.bandwidth,
+                       pair_bandwidth=pairs)
+
 
 def make_pi_cluster(freqs_ghz: Sequence[float],
                     bandwidth_mbps: float = 50.0) -> Cluster:

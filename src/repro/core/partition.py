@@ -19,7 +19,7 @@ NAS-style graphs as described in §6.2.3.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Mapping, Sequence
 
 from .graph import Graph, tile_widths
@@ -50,6 +50,27 @@ class PartitionResult:
 
     def __len__(self):
         return len(self.pieces)
+
+    @classmethod
+    def from_pieces(cls, pieces: Sequence[Piece], *,
+                    states_explored: int = 0,
+                    wall_time_s: float = 0.0) -> "PartitionResult":
+        """Honest result for a reused/caller-supplied piece chain.
+
+        Pieces are re-indexed to their chain position and the objective
+        is the true F(G) of the chain (worst piece redundancy).
+        ``states_explored``/``wall_time_s`` default to 0 — nothing was
+        searched — but a re-planner can carry the original search stats
+        through so downstream audits (e.g. the serving scheduler's
+        repartition records) see the partition's real provenance.
+        """
+        pieces = list(pieces)
+        if not pieces:
+            raise ValueError("from_pieces needs at least one piece")
+        pieces = [p if p.index == i else replace(p, index=i)
+                  for i, p in enumerate(pieces)]
+        return cls(pieces, max(p.redundancy for p in pieces),
+                   states_explored, wall_time_s)
 
 
 def piece_redundancy(

@@ -11,6 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
+from ..api._compat import _UNSET, pick, unset, warn_legacy
+from ..api.specs import PlanSpec
 from .graph import Graph
 from .cost import Cluster, CostTable, stage_cost
 from .partition import (Piece, PartitionResult, partition_graph,
@@ -37,37 +39,50 @@ class PicoPlan:
         return self.pipeline.throughput
 
 
-def plan(
+def plan_with_spec(
     g: Graph,
     cluster: Cluster,
     input_size: tuple[int, int],
-    t_lim: float = float("inf"),
-    max_diameter: int = 5,
-    n_split: int | None = None,
-    dnc_threshold: int = 120,
+    spec: PlanSpec | None = None,
+    *,
     pieces: Sequence[Piece] | None = None,
+    partition: PartitionResult | None = None,
     cost_table: CostTable | None = None,
 ) -> PicoPlan:
-    """Run the full PICO optimization.
+    """Run the full PICO optimization under a :class:`PlanSpec`.
 
-    ``n_split`` (reference tiling for C(M)) defaults to the cluster size.
-    Graphs wider/longer than ``dnc_threshold`` vertices use the
-    divide-and-conquer driver.  ``cost_table`` (from
-    ``exec.calibrate``) substitutes measured per-segment compute costs
-    for the analytic alpha model in every stage costing.
+    This is the one implementation every entry point (the ``repro.api``
+    facade, the legacy :func:`plan`/:func:`replan` shims, the runtime's
+    churn re-planner, the serving scheduler) funnels into.
+
+    Algorithm 1 may be skipped by supplying either raw ``pieces`` (an
+    honest :class:`PartitionResult` is derived via
+    :meth:`PartitionResult.from_pieces`) or a full ``partition`` whose
+    search stats are carried through — re-plans reuse the piece chain
+    without fabricating degenerate partition metadata.  ``cost_table``
+    (from ``exec.calibrate``) substitutes measured per-segment compute
+    costs for the analytic alpha model in every stage costing.
     """
-    n_split = n_split or max(2, len(cluster))
-    if pieces is None:
-        if len(g.layers) > dnc_threshold:
-            part = partition_graph_dnc(g, input_size, n_split, max_diameter)
-        else:
-            part = partition_graph(g, input_size, n_split, max_diameter)
+    spec = spec or PlanSpec()
+    if partition is not None:
+        if pieces is not None:
+            raise ValueError("pass pieces= or partition=, not both")
+        part = PartitionResult.from_pieces(
+            partition.pieces, states_explored=partition.states_explored,
+            wall_time_s=partition.wall_time_s)
+    elif pieces is not None:
+        part = PartitionResult.from_pieces(pieces)
     else:
-        part = PartitionResult(list(pieces), max(p.redundancy for p in pieces),
-                               0, 0.0)
+        n_split = spec.resolve_n_split(len(cluster))
+        if len(g.layers) > spec.dnc_threshold:
+            part = partition_graph_dnc(g, input_size, n_split,
+                                       spec.max_diameter)
+        else:
+            part = partition_graph(g, input_size, n_split,
+                                   spec.max_diameter)
 
     homo = cluster.homogenized()
-    dp = PipelineDP(g, part.pieces, homo, input_size, t_lim,
+    dp = PipelineDP(g, part.pieces, homo, input_size, spec.t_lim,
                     cost_table=cost_table)
     homo_plan = dp.build()
     final = adjust_stages(homo_plan, cluster, g, input_size,
@@ -75,26 +90,74 @@ def plan(
     return PicoPlan(part, final)
 
 
+def plan(
+    g: Graph,
+    cluster: Cluster,
+    input_size: tuple[int, int],
+    t_lim: float = _UNSET,
+    max_diameter: int = _UNSET,
+    n_split: int | None = _UNSET,
+    dnc_threshold: int = _UNSET,
+    pieces: Sequence[Piece] | None = None,
+    cost_table: CostTable | None = None,
+    spec: PlanSpec | None = None,
+) -> PicoPlan:
+    """Run the full PICO optimization.
+
+    Planner knobs live in ``spec`` (:class:`~repro.api.specs.PlanSpec`);
+    the individual ``t_lim``/``max_diameter``/``n_split``/
+    ``dnc_threshold`` keywords are a deprecated compatibility surface
+    that maps onto an equivalent spec.  ``pieces`` skips Algorithm 1
+    with a caller-supplied chain; ``cost_table`` substitutes measured
+    per-segment compute costs for the analytic alpha model.
+    """
+    legacy = not unset(t_lim, max_diameter, n_split, dnc_threshold)
+    if spec is not None:
+        if legacy:
+            raise TypeError("pass either spec= or the legacy planner "
+                            "kwargs, not both")
+    else:
+        if legacy:
+            warn_legacy("repro.core.plan",
+                        "plan(g, cluster, input_size, spec=PlanSpec(...))")
+        spec = PlanSpec(t_lim=pick(t_lim, float("inf")),
+                        max_diameter=pick(max_diameter, 5),
+                        n_split=pick(n_split, None),
+                        dnc_threshold=pick(dnc_threshold, 120))
+    return plan_with_spec(g, cluster, input_size, spec, pieces=pieces,
+                          cost_table=cost_table)
+
+
 def replan(
     g: Graph,
     cluster: Cluster,
     input_size: tuple[int, int],
     prev: PicoPlan,
-    t_lim: float = float("inf"),
+    t_lim: float = _UNSET,
     cost_table: CostTable | None = None,
+    spec: PlanSpec | None = None,
 ) -> PicoPlan:
     """Incremental re-plan after a cluster change (runtime feedback loop).
 
     Algorithm 1's piece chain depends only on the graph, so it is reused
-    from ``prev`` verbatim; only the device-dependent steps re-run
-    (Algorithm 2's DP over the homogenized cluster + Algorithm 3's
-    heterogeneous adjustment).  ``cluster`` is expected to carry
-    *measured* costs — e.g. ``Monitor.calibrated_cluster`` scales each
-    device's alpha by its observed/modeled EWMA — so successive re-plans
-    optimize against the cluster as it behaves, not as it was specced.
+    from ``prev`` verbatim (search stats carried through); only the
+    device-dependent steps re-run (Algorithm 2's DP over the homogenized
+    cluster + Algorithm 3's heterogeneous adjustment).  ``cluster`` is
+    expected to carry *measured* costs — e.g.
+    ``Monitor.calibrated_cluster`` scales each device's alpha by its
+    observed/modeled EWMA — so successive re-plans optimize against the
+    cluster as it behaves, not as it was specced.
     """
-    return plan(g, cluster, input_size, t_lim, pieces=prev.partition.pieces,
-                cost_table=cost_table)
+    if spec is not None:
+        if not unset(t_lim):
+            raise TypeError("pass either spec= or t_lim=, not both")
+    else:
+        if not unset(t_lim):
+            warn_legacy("repro.core.replan",
+                        "replan(..., spec=PlanSpec(...))")
+        spec = PlanSpec(t_lim=pick(t_lim, float("inf")))
+    return plan_with_spec(g, cluster, input_size, spec,
+                          partition=prev.partition, cost_table=cost_table)
 
 
 @dataclass
@@ -168,6 +231,7 @@ def partition_cluster(
     t_lims: Sequence[float] | None = None,
     cost_table: CostTable | None = None,
     prev: Sequence[PicoPlan | None] | None = None,
+    plan_specs: Sequence[PlanSpec | None] | None = None,
 ) -> ClusterPartition:
     """Split one cluster's devices across several co-hosted models and
     run the PICO optimization on each sub-cluster (the many-to-many
@@ -179,8 +243,10 @@ def partition_cluster(
     Every tenant gets at least one device; remaining devices go
     largest-first to the tenant most below its weighted capacity
     target.  ``prev[i]`` (a prior :class:`PicoPlan` for model ``i``)
-    reuses Algorithm 1's piece chain via :func:`replan` so load-shift
-    re-partitions only redo the device-dependent planning steps.
+    reuses Algorithm 1's piece chain so load-shift re-partitions only
+    redo the device-dependent planning steps.  ``plan_specs[i]`` carries
+    tenant ``i``'s planner knobs; ``t_lims`` is the legacy equivalent
+    (ignored where a spec is given).
     """
     n = len(models)
     if n == 0:
@@ -192,20 +258,17 @@ def partition_cluster(
 
     shares = []
     for i, bucket in enumerate(buckets):
-        names = {d.name for d in bucket}
-        pairs = {k: v for k, v in cluster.pair_bandwidth.items()
-                 if k[0] in names and k[1] in names}
-        sub = Cluster(bucket, bandwidth=cluster.bandwidth,
-                      pair_bandwidth=pairs)
+        sub = cluster.restricted(bucket)
         m = models[i]
-        t_lim = t_lims[i] if t_lims is not None else float("inf")
+        spec = plan_specs[i] if plan_specs is not None else None
+        if spec is None:
+            t_lim = t_lims[i] if t_lims is not None else float("inf")
+            spec = PlanSpec(t_lim=t_lim)
         prev_i = prev[i] if prev is not None else None
-        if prev_i is not None:
-            pico = replan(m.graph, sub, m.input_size, prev=prev_i,
-                          t_lim=t_lim, cost_table=cost_table)
-        else:
-            pico = plan(m.graph, sub, m.input_size, t_lim,
-                        cost_table=cost_table)
+        pico = plan_with_spec(
+            m.graph, sub, m.input_size, spec,
+            partition=prev_i.partition if prev_i is not None else None,
+            cost_table=cost_table)
         shares.append(TenantShare(i, sub, pico))
     return ClusterPartition(shares, w)
 

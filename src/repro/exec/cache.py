@@ -52,12 +52,18 @@ def clear_cache() -> None:
     _STATS.hits = _STATS.misses = _STATS.evictions = 0
 
 
-def set_cache_size(n: int) -> None:
+def set_cache_size(n: int) -> int:
+    """Bound the executable cache; returns the previous bound so a
+    scoped caller (tests, benchmarks) can restore it afterwards.  The
+    cache is process-global, so the bound is last-write-wins across
+    deployments."""
     global _MAXSIZE
+    prev = _MAXSIZE
     _MAXSIZE = max(1, int(n))
     while len(_CACHE) > _MAXSIZE:
         _CACHE.popitem(last=False)
         _STATS.evictions += 1
+    return prev
 
 
 def static_stage_key(model, nodes, plans, needs) -> tuple:

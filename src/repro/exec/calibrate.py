@@ -105,16 +105,21 @@ def calibrate_plan(model, params, stages: Sequence, *,
 
 def calibrated_plan(g, cluster, input_size, model, params, *,
                     backend: str | None = None, t_lim: float = float("inf"),
-                    iters: int = 3):
+                    iters: int = 3, plan_spec=None):
     """Plan -> calibrate -> re-plan on measured costs (one closed loop).
 
     Returns ``(pico, report)`` where ``pico`` was re-planned with the
     measured :class:`CostTable` and ``report`` holds the raw timings.
+    ``plan_spec`` (:class:`~repro.api.specs.PlanSpec`) supersedes the
+    bare ``t_lim``.
     """
-    from ..core.planner import plan, replan
-    first = plan(g, cluster, input_size, t_lim)
+    from ..api.specs import PlanSpec
+    from ..core.planner import plan_with_spec
+    spec = plan_spec or PlanSpec(t_lim=t_lim)
+    first = plan_with_spec(g, cluster, input_size, spec)
     report = calibrate_plan(model, params, first.pipeline.stages,
                             backend=backend, iters=iters)
     table = report.table()
-    return replan(g, cluster, input_size, prev=first, t_lim=t_lim,
-                  cost_table=table), report
+    return plan_with_spec(g, cluster, input_size, spec,
+                          partition=first.partition,
+                          cost_table=table), report

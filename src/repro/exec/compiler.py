@@ -101,8 +101,12 @@ class CompiledStage:
 
 def compile_stage(model, nodes, fractions: Sequence[float], *,
                   backend: str | None = None, relu: bool = True,
-                  donate: bool = False) -> CompiledStage:
-    """Convenience: plan tiles for ``fractions`` and compile the stage."""
+                  donate: bool = False, spec=None) -> CompiledStage:
+    """Convenience: plan tiles for ``fractions`` and compile the stage.
+    ``spec`` (:class:`~repro.api.specs.ExecSpec`) supersedes the
+    individual ``backend``/``donate`` knobs when given."""
+    if spec is not None:
+        backend, donate = spec.backend, spec.donate
     nodes = frozenset(nodes)
     g = model.graph
     plans = plan_tiles(g, nodes, model.full_sizes, model.input_size,

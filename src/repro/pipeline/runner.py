@@ -36,8 +36,15 @@ class PipelineRunner:
     plan: PipelinePlan
     backend: str | None = None       # conv lowering; None -> model default
     mode: str = "compiled"           # "compiled" | "eager" stage execution
+    exec_spec: object = None         # ExecSpec; supersedes backend/mode
 
     def __post_init__(self):
+        if self.exec_spec is not None:
+            # donate is deliberately NOT taken from the spec: stages here
+            # share `produced` boundary tensors across the whole plan, so
+            # donation would let XLA clobber buffers later stages read
+            self.backend = self.exec_spec.backend
+            self.mode = self.exec_spec.mode
         self.stages = executors_from_plan(self.model, self.plan.stages,
                                           backend=self.backend,
                                           mode=self.mode)

@@ -109,7 +109,16 @@ class StageExecutor:
 
 def executors_from_plan(model: "CNNDef", stages: Sequence[StagePlan],  # noqa: F821
                         backend: str | None = None, mode: str = "compiled",
-                        donate: bool = False) -> list[StageExecutor]:
+                        donate: bool = False,
+                        spec=None) -> list[StageExecutor]:
+    """Build one executor per stage.  ``spec``
+    (:class:`~repro.api.specs.ExecSpec`) supersedes the individual
+    ``backend``/``mode`` knobs when given — but never ``donate``:
+    stages of one plan share boundary tensors, so donation here would
+    let XLA clobber buffers a later stage still reads (single-stage
+    callers opt in via the explicit ``donate=`` argument)."""
+    if spec is not None:
+        backend, mode = spec.backend, spec.mode
     return [StageExecutor(model, st.nodes, list(st.fractions),
                           name=f"stage{si}", backend=backend, mode=mode,
                           donate=donate)

@@ -49,9 +49,11 @@ from typing import Sequence
 
 import numpy as np
 
+from ..api._compat import _UNSET, pick, unset, warn_legacy
+from ..api.specs import ExecSpec, PlanSpec
 from ..core.cost import Cluster, CostTable
 from ..core.pipeline_dp import StagePlan
-from ..core.planner import PicoPlan, plan as plan_full, recost, replan
+from ..core.planner import PicoPlan, plan_with_spec, recost
 from ..core.graph import Graph
 from .actors import ActorPool
 from .churn import (ChurnEvent, DeviceJoin, DeviceLeave, FreqScale,
@@ -215,27 +217,38 @@ class PipelineRuntime:
         churn: Sequence[ChurnEvent] = (),
         model=None,                     # CNNDef: real JAX compute per stage
         params=None,
-        t_lim: float = float("inf"),
-        backend: str | None = None,     # conv lowering for real compute
+        t_lim: float = _UNSET,          # deprecated: use plan_spec=
+        backend: str | None = _UNSET,   # deprecated: use exec_spec=
         cost_table: CostTable | None = None,  # measured costs (exec.calibrate)
+        plan_spec: PlanSpec | None = None,
+        exec_spec: ExecSpec | None = None,
     ):
         if model is not None:
             g = model.graph
             input_size = model.input_size
         if g is None or cluster is None or input_size is None:
             raise ValueError("need (g, cluster, input_size) or model=")
+        if not unset(t_lim, backend):
+            if plan_spec is not None or exec_spec is not None:
+                raise TypeError("pass either specs or the legacy "
+                                "t_lim=/backend= kwargs, not both")
+            warn_legacy("repro.runtime.PipelineRuntime",
+                        "PipelineRuntime(..., plan_spec=PlanSpec(...), "
+                        "exec_spec=ExecSpec(...))")
         self.g = g
         self.input_size = input_size
         self.cluster = cluster
-        self.t_lim = t_lim
+        self.plan_spec = plan_spec or PlanSpec(t_lim=pick(t_lim,
+                                                          float("inf")))
+        self.exec_spec = exec_spec or ExecSpec(backend=pick(backend, None))
         self.model = model
         self.params = params
-        self.backend = backend
         self.cost_table = cost_table
         self.config = config or RuntimeConfig()
         self.rng = np.random.default_rng(self.config.seed)
-        self.pico = pico or plan_full(g, cluster, input_size, t_lim,
-                                      cost_table=cost_table)
+        self.pico = pico or plan_with_spec(g, cluster, input_size,
+                                           self.plan_spec,
+                                           cost_table=cost_table)
         self.monitor = Monitor(beta=self.config.ewma_beta,
                                drift_threshold=self.config.drift_threshold)
         self.pool = ActorPool(cluster.devices,
@@ -252,6 +265,14 @@ class PipelineRuntime:
         self._samples_at_replan = 0
         self._build_stages()
 
+    @property
+    def t_lim(self) -> float:
+        return self.plan_spec.t_lim
+
+    @property
+    def backend(self) -> str | None:
+        return self.exec_spec.backend
+
     # ------------------------------------------------------------------
     # plan -> executable stage states
     # ------------------------------------------------------------------
@@ -264,7 +285,8 @@ class PipelineRuntime:
             # compiled executors: across re-plans, stages whose segment +
             # tiling survive come straight from the executable cache
             execs = executors_from_plan(self.model, self.pico.pipeline.stages,
-                                        backend=self.backend)
+                                        backend=self.backend,
+                                        mode=self.exec_spec.mode)
             for st, ex in zip(self.stages, execs):
                 st.executor = ex
 
@@ -501,11 +523,12 @@ class PipelineRuntime:
     def _exec_batch(self, st: _StageState, batch: "_Batch") -> None:
         """Real numerics for one batch: single frames keep the seed's
         bit-exact ``__call__`` path; larger batches stack the boundary
-        tensors and go through the compiled ``run_frames`` scan."""
-        if len(batch) == 1:
-            fr = batch.frames[0]
-            outs = st.executor(self.params, fr.produced, fr.image)
-            fr.produced.update(outs)
+        tensors and go through the compiled ``run_frames`` scan (unless
+        ``ExecSpec.scan_batch`` turned the scan path off)."""
+        if len(batch) == 1 or not self.exec_spec.scan_batch:
+            for fr in batch.frames:
+                outs = st.executor(self.params, fr.produced, fr.image)
+                fr.produced.update(outs)
             return
         import jax.numpy as jnp
         frames = batch.frames
@@ -662,8 +685,9 @@ class PipelineRuntime:
             names = frozenset(d.name for d in st.devices)
             for p in range(st.first_piece, st.last_piece + 1):
                 old_hosts[p] = names
-        new = replan(self.g, calibrated, self.input_size, prev=old,
-                     t_lim=self.t_lim, cost_table=self.cost_table)
+        new = plan_with_spec(self.g, calibrated, self.input_size,
+                             self.plan_spec, partition=old.partition,
+                             cost_table=self.cost_table)
         # keep the incumbent plan if it is still runnable and wins when
         # both are priced with measured costs (the DP must use every
         # device, so a fresh plan can lose — e.g. after a weak join)

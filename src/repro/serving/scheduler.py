@@ -35,6 +35,8 @@ import zlib
 from dataclasses import dataclass, field, replace
 from typing import Mapping, Sequence
 
+from ..api._compat import _UNSET, pick, unset, warn_legacy
+from ..api.specs import ExecSpec, PlanSpec
 from ..core.cost import Cluster, CostTable
 from ..core.planner import PicoPlan, partition_cluster, split_devices
 from ..data.pipeline import Request
@@ -57,7 +59,11 @@ class TenantConfig:
     slo_s: float = float("inf")     # per-request deadline after arrival
     max_queue: int = 256            # admission bound on in-system requests
     max_batch: int = 4              # stage-0 micro-batch cap
-    t_lim: float = float("inf")     # planner latency limit
+    t_lim: float = float("inf")     # planner latency limit (legacy surface)
+    plan_spec: PlanSpec | None = None   # full planner spec; wins over t_lim
+
+    def planner_spec(self) -> PlanSpec:
+        return self.plan_spec or PlanSpec(t_lim=self.t_lim)
 
 
 @dataclass
@@ -167,16 +173,23 @@ class ServingScheduler:
 
     def __init__(self, tenants: Sequence[TenantConfig], cluster: Cluster,
                  config: SchedulerConfig | None = None,
-                 backend: str | None = None,
-                 cost_table: CostTable | None = None):
+                 backend: str | None = _UNSET,
+                 cost_table: CostTable | None = None,
+                 exec_spec: ExecSpec | None = None):
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in {names}")
         if not tenants:
             raise ValueError("need at least one tenant")
+        if not unset(backend):
+            if exec_spec is not None:
+                raise TypeError("pass either exec_spec= or the legacy "
+                                "backend= kwarg, not both")
+            warn_legacy("repro.serving.ServingScheduler",
+                        "ServingScheduler(..., exec_spec=ExecSpec(...))")
         self.cluster = cluster
         self.config = config or SchedulerConfig()
-        self.backend = backend
+        self.exec_spec = exec_spec or ExecSpec(backend=pick(backend, None))
         self.cost_table = cost_table
         self._devices = list(cluster.devices)
         self._tenants: dict[str, _TenantState] = {
@@ -185,11 +198,16 @@ class ServingScheduler:
         self.partition = partition_cluster(
             [t.model for t in tenants], cluster,
             weights=[t.weight for t in tenants],
-            t_lims=[t.t_lim for t in tenants], cost_table=cost_table)
+            plan_specs=[t.planner_spec() for t in tenants],
+            cost_table=cost_table)
         for share, ts in zip(self.partition.shares, self._tenants.values()):
             ts.share = share
         self._loaded = False
         self._served = False
+
+    @property
+    def backend(self) -> str | None:
+        return self.exec_spec.backend
 
     # ------------------------------------------------------------------
 
@@ -220,7 +238,7 @@ class ServingScheduler:
     def _build_runtime(self, ts: _TenantState, generation: int,
                        paused: bool) -> None:
         kw = dict(cluster=ts.share.cluster, pico=ts.share.pico,
-                  t_lim=ts.cfg.t_lim, backend=self.backend,
+                  plan_spec=ts.cfg.planner_spec(), exec_spec=self.exec_spec,
                   cost_table=self.cost_table,
                   config=self._runtime_config(ts, generation))
         if ts.params is not None:
@@ -551,7 +569,7 @@ class ServingScheduler:
             Cluster(self._devices, bandwidth=self.cluster.bandwidth,
                     pair_bandwidth=dict(self.cluster.pair_bandwidth)),
             weights=[shares[ts.cfg.name] for ts in active],
-            t_lims=[ts.cfg.t_lim for ts in active],
+            plan_specs=[ts.cfg.planner_spec() for ts in active],
             cost_table=self.cost_table,
             prev=[ts.share.pico if ts.share is not None else None
                   for ts in active])
@@ -634,13 +652,14 @@ def serve_time_sliced(tenants: Sequence[TenantConfig], cluster: Cluster,
     serving every tenant on all devices loses to right-sized
     sub-clusters even before the switching overhead.
     """
-    from ..core.planner import plan as plan_full
+    from ..core.planner import plan_with_spec
 
     plans: dict[str, PicoPlan] = {}
     for tc in tenants:
-        plans[tc.name] = plan_full(tc.model.graph, cluster,
-                                   tc.model.input_size, tc.t_lim,
-                                   cost_table=cost_table)
+        plans[tc.name] = plan_with_spec(tc.model.graph, cluster,
+                                        tc.model.input_size,
+                                        tc.planner_spec(),
+                                        cost_table=cost_table)
     arb = WeightedArbiter({tc.name: tc.weight for tc in tenants})
     queues = {tc.name: TenantQueue(max_queue=tc.max_queue)
               for tc in tenants}

@@ -14,13 +14,43 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
-import jax
 import numpy as np
 
-from ..core import Cluster, plan
+from ..api._compat import _UNSET, pick, unset, warn_legacy
+from ..api.specs import DeploySpec, ExecSpec, PlanSpec
+from ..core import Cluster, plan_with_spec
 from ..models.cnn.builder import CNNDef
 from ..pipeline.runner import PipelineRunner
 from ..data.pipeline import Request
+
+
+def _resolve_specs(who: str, t_lim, backend, plan_spec, exec_spec
+                   ) -> tuple["PlanSpec", "ExecSpec"]:
+    """Map a server's legacy ``t_lim=``/``backend=`` kwargs onto specs,
+    warning once per entry point; reject mixing the two surfaces."""
+    if not unset(t_lim, backend):
+        if plan_spec is not None or exec_spec is not None:
+            raise TypeError(f"{who}: pass either specs or the legacy "
+                            "t_lim=/backend= kwargs, not both")
+        # one extra frame (this helper) between warn and the user's call
+        warn_legacy(who, f"{who}(..., plan_spec=PlanSpec(...), "
+                         "exec_spec=ExecSpec(...)) or repro.compile()",
+                    stacklevel=4)
+    plan_spec = plan_spec or PlanSpec(t_lim=pick(t_lim, float("inf")))
+    exec_spec = exec_spec or ExecSpec(backend=pick(backend, None))
+    return plan_spec, exec_spec
+
+
+def _load_params_idempotent(srv, key):
+    """Shared server ``load()`` body: params attached beforehand (e.g.
+    by ``Deployment.server()``) survive unless ``key`` forces a
+    re-init.  Delegates the actual init (default key included) to the
+    facade's one implementation so servers and deployments cannot
+    drift."""
+    if srv.params is None or key is not None:
+        from ..api.deployment import _init_params
+        srv.params = _init_params(srv.model, key)
+    return srv
 
 
 @dataclass
@@ -95,20 +125,27 @@ class ServeStats:
 
 class PipelineServer:
     def __init__(self, model: CNNDef, cluster: Cluster,
-                 t_lim: float = float("inf"), backend: str | None = None,
-                 cost_table=None):
+                 t_lim: float = _UNSET, backend: str | None = _UNSET,
+                 cost_table=None, plan_spec: PlanSpec | None = None,
+                 exec_spec: ExecSpec | None = None, pico=None):
+        plan_spec, exec_spec = _resolve_specs(
+            "repro.serving.PipelineServer", t_lim, backend,
+            plan_spec, exec_spec)
         self.model = model
         self.cluster = cluster
-        self.pico = plan(model.graph, cluster, model.input_size, t_lim,
-                         cost_table=cost_table)
+        self.exec_spec = exec_spec
+        self.pico = pico or plan_with_spec(model.graph, cluster,
+                                           model.input_size, plan_spec,
+                                           cost_table=cost_table)
         self.runner = PipelineRunner(model, self.pico.pipeline,
-                                     backend=backend)
+                                     backend=exec_spec.backend,
+                                     mode=exec_spec.mode)
         self.params = None
 
     def load(self, key=None):
-        key = key if key is not None else jax.random.PRNGKey(0)
-        self.params = self.model.init(key)
-        return self
+        """Initialize weights (idempotent — see
+        :func:`_load_params_idempotent`)."""
+        return _load_params_idempotent(self, key)
 
     def serve(self, requests: list[Request]) -> tuple[list, ServeStats]:
         """Run the request stream through the pipeline.
@@ -152,21 +189,31 @@ class StreamingPipelineServer:
     """
 
     def __init__(self, model: CNNDef, cluster: Cluster,
-                 t_lim: float = float("inf"), config=None, churn=(),
-                 backend: str | None = None, cost_table=None):
-        from ..runtime import PipelineRuntime, RuntimeConfig
+                 t_lim: float = _UNSET, config=None, churn=(),
+                 backend: str | None = _UNSET, cost_table=None,
+                 plan_spec: PlanSpec | None = None,
+                 exec_spec: ExecSpec | None = None,
+                 deploy_spec: DeploySpec | None = None, pico=None):
+        from ..runtime import RuntimeConfig
+        plan_spec, exec_spec = _resolve_specs(
+            "repro.serving.StreamingPipelineServer", t_lim, backend,
+            plan_spec, exec_spec)
+        if deploy_spec is not None and config is not None:
+            raise TypeError("pass either deploy_spec= or config=, not both")
+        if deploy_spec is not None:
+            config = deploy_spec.to_runtime_config()
         self.model = model
         self.cluster = cluster
         self._runtime_kw = dict(
-            cluster=cluster, t_lim=t_lim,
+            cluster=cluster, plan_spec=plan_spec, exec_spec=exec_spec,
             config=config or RuntimeConfig(), churn=churn,
-            backend=backend, cost_table=cost_table)
+            cost_table=cost_table, pico=pico)
         self.params = None
 
     def load(self, key=None):
-        key = key if key is not None else jax.random.PRNGKey(0)
-        self.params = self.model.init(key)
-        return self
+        """Initialize weights (idempotent — see
+        :func:`_load_params_idempotent`)."""
+        return _load_params_idempotent(self, key)
 
     def serve(self, requests: list[Request]) -> tuple[list, ServeStats]:
         assert self.params is not None, "call load() first"

@@ -1,0 +1,1 @@
+"""Operational CLIs over the public ``repro.api`` facade."""

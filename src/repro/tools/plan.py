@@ -1,0 +1,146 @@
+"""Plan CLI: build, save, load, and validate deployment artifacts.
+
+The offline half of the paper's offline-plan/online-execute split as a
+shell command — plan on a workstation, ship ``plan.json`` to the fleet:
+
+    # plan VGG16 across 4 heterogeneous Pis and save the artifact
+    python -m repro.tools.plan --model vgg16 --devices 4 --out plan.json
+
+    # on the target: reload and verify without re-planning
+    python -m repro.tools.plan --load plan.json --validate
+
+``--validate`` proves the artifact round-trips (re-serialization is
+byte-identical), prices coherently (simulate matches the plan period),
+and — with ``--execute`` — still produces numerics bit-exact with the
+monolithic forward.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_FREQS = (1.5, 1.2, 1.0, 0.8)
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tools.plan", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--model", default=None,
+                    help="zoo model name (vgg16, resnet34, squeezenet, ...)")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="channel scale for the zoo model")
+    ap.add_argument("--input", default=None, metavar="W[,H]",
+                    help="input size override, e.g. 128 or 128,96")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="cluster size (Raspberry-Pi model)")
+    ap.add_argument("--freqs", default=None,
+                    help="comma-separated device GHz (cycled to --devices); "
+                         f"default {','.join(map(str, DEFAULT_FREQS))}")
+    ap.add_argument("--bandwidth-mbps", type=float, default=50.0)
+    ap.add_argument("--t-lim", type=float, default=float("inf"))
+    ap.add_argument("--max-diameter", type=int, default=5)
+    ap.add_argument("--n-split", type=int, default=None)
+    ap.add_argument("--backend", default=None,
+                    help="conv lowering backend (xla, pallas)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="time compiled stages and re-plan on measured costs")
+    ap.add_argument("--out", default=None, help="write the deployment here")
+    ap.add_argument("--load", default=None, metavar="PLAN_JSON",
+                    help="load a saved deployment instead of planning")
+    ap.add_argument("--validate", action="store_true",
+                    help="with --load: verify round-trip + simulate")
+    ap.add_argument("--execute", action="store_true",
+                    help="with --validate: run one frame and check numerics")
+    return ap
+
+
+def _make_cluster(args):
+    from repro.core import make_pi_cluster
+    freqs = ([float(f) for f in args.freqs.split(",")] if args.freqs
+             else list(DEFAULT_FREQS))
+    freqs = [freqs[i % len(freqs)] for i in range(args.devices)]
+    return make_pi_cluster(freqs, bandwidth_mbps=args.bandwidth_mbps)
+
+
+def _make_model(args):
+    from repro.models.cnn import zoo
+    kw = {"scale": args.scale}
+    if args.input:
+        parts = [int(x) for x in args.input.split(",")]
+        kw["input_size"] = (parts[0], parts[-1] if len(parts) > 1
+                            else parts[0])
+    return zoo.build(args.model, **kw)
+
+
+def _cmd_plan(args) -> int:
+    import repro
+    model = _make_model(args)
+    cluster = _make_cluster(args)
+    dep = repro.compile(
+        model, cluster,
+        repro.PlanSpec(t_lim=args.t_lim, max_diameter=args.max_diameter,
+                       n_split=args.n_split),
+        repro.ExecSpec(backend=args.backend, calibrate=args.calibrate))
+    print(dep.describe())
+    if args.out:
+        path = dep.save(args.out)
+        print(f"saved deployment artifact -> {path}")
+    return 0
+
+
+def _cmd_load(args) -> int:
+    import repro
+    dep = repro.Deployment.load(args.load)
+    print(dep.describe())
+    if not args.validate:
+        return 0
+    # 1. re-serialization is byte-identical (stable schema)
+    s = dep.to_json()
+    if repro.Deployment.from_json(s).to_json() != s:
+        print("FAIL: artifact does not re-serialize identically",
+              file=sys.stderr)
+        return 1
+    with open(args.load) as f:
+        version = json.load(f).get("version")
+    # 2. the priced plan is internally coherent
+    rep = dep.simulate(frames=16)
+    worst = max(st.cost.total for st in dep.pipeline.stages)
+    if abs(rep.period - worst) > 1e-9 * max(1.0, worst):
+        print(f"FAIL: simulate period {rep.period} != plan period {worst}",
+              file=sys.stderr)
+        return 1
+    print(f"validate: schema v{version} ok, round-trip ok, "
+          f"simulated period {rep.period * 1e3:.2f} ms, "
+          f"avg util {rep.avg_utilization:.2f}")
+    if args.execute:
+        import jax
+        import numpy as np
+        w, h = dep.model.input_size
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, h, w, dep.model.in_channels))
+        out = dep.run(x)
+        ref = dep.model.forward(dep.params, x)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-5, atol=1e-5)
+        print("execute: pipelined outputs match monolithic forward ✓")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.load:
+        return _cmd_load(args)
+    if not args.model:
+        print("error: need --model to plan or --load to reload",
+              file=sys.stderr)
+        return 2
+    return _cmd_plan(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

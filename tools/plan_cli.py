@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""Thin launcher for ``repro.tools.plan`` when the package is not on
+``sys.path`` (CI and repo-root usage): ``python tools/plan_cli.py ...``
+is identical to ``PYTHONPATH=src python -m repro.tools.plan ...``."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.tools.plan import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
