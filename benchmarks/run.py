@@ -14,15 +14,34 @@ CSV rows (one per measurement), mirroring the paper's tables/figures:
 
 Use --fast to trim the slowest sweeps (full mode is the default for
 ``python -m benchmarks.run``).  --smoke runs a tiny-config subset for
-CI.  --out <path> additionally writes the rows plus a flattened
-``metrics`` dict as JSON — the one code path CI's bench-regression gate
-(``tools/bench_gate.py``) and local runs share.
+CI.  --out <path> additionally writes the rows, a flattened ``metrics``
+dict, and a versioned ``repro.obs`` metrics snapshot (the same envelope
+``Deployment.metrics_snapshot()`` emits, carrying the run's executable
+-cache and conv-fallback counters) as JSON — the one code path CI's
+bench-regression gate (``tools/bench_gate.py``) and local runs share.
+--trace-out <path> additionally runs a small traced VGG16 pipeline and
+writes its Perfetto trace (validated in CI by
+``python -m repro.tools.trace --validate``).
 """
 
 import argparse
 import json
 import sys
 import time
+
+
+def write_trace(path: str, frames: int = 16) -> str:
+    """Run the fig13 VGG16 pipeline (tiny config, virtual time) with
+    tracing on and save the Perfetto trace to ``path``."""
+    import repro
+    from repro.core import make_pi_cluster
+    from repro.models.cnn import zoo
+    model = zoo.build("vgg16", scale=0.25, input_size=(64, 64))
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 0.8], bandwidth_mbps=50.0)
+    dep = repro.compile(model, cluster)
+    rt = dep.runtime(repro.DeploySpec(trace=True), real_compute=False)
+    rt.run(n_frames=frames)
+    return dep.save_trace(path)
 
 
 def parse_metrics(rows: list[str]) -> dict[str, float]:
@@ -61,6 +80,9 @@ def main() -> None:
                     help="comma-separated benchmark names")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="also write rows + flattened metrics as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also run a small traced VGG16 pipeline and "
+                         "write its Perfetto trace JSON")
     args = ap.parse_args()
 
     from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
@@ -109,15 +131,29 @@ def main() -> None:
         all_rows.extend(benches[name]())
     wall = time.time() - t0
     print(f"# {len(all_rows)} rows in {wall:.1f}s", file=sys.stderr)
+    mode = "smoke" if args.smoke else "fast" if args.fast else "full"
     if args.out:
+        # embed the versioned repro.obs snapshot next to the legacy
+        # flat-metrics dict: the bench run's process-global counters
+        # (executable-cache hits, conv fallbacks, compile times) ride
+        # along, and tools/bench_gate.py can gate on either form
+        from repro.obs.metrics import registry_from_values, default_registry
+        metrics = parse_metrics(all_rows)
+        reg = registry_from_values(metrics)
+        reg.merge(default_registry())
+        snapshot = reg.snapshot(meta={"mode": mode, "wall_s": wall,
+                                      "source": "benchmarks.run"})
         with open(args.out, "w") as fh:
             json.dump({"rows": all_rows,
-                       "metrics": parse_metrics(all_rows),
+                       "metrics": metrics,
+                       "snapshot": snapshot,
                        "wall_s": wall,
-                       "mode": ("smoke" if args.smoke
-                                else "fast" if args.fast else "full")},
+                       "mode": mode},
                       fh, indent=2, sort_keys=True)
         print(f"# wrote {args.out}", file=sys.stderr)
+    if args.trace_out:
+        write_trace(args.trace_out)
+        print(f"# wrote {args.trace_out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -23,9 +23,10 @@ _LAZY = {
     "ExecSpec": ("repro.api.specs", "ExecSpec"),
     "DeploySpec": ("repro.api.specs", "DeploySpec"),
     "api": ("repro.api", None),
+    "obs": ("repro.obs", None),
 }
 
 __all__ = ["compile", "Deployment", "PlanSpec", "ExecSpec", "DeploySpec",
-           "api"]
+           "api", "obs"]
 
 __getattr__, __dir__ = lazy_exports(__name__, globals(), _LAZY)

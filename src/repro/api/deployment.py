@@ -25,6 +25,9 @@ from typing import Mapping, Sequence
 
 from ..core.cost import Cluster, CostTable
 from ..core.planner import PicoPlan, plan_with_spec
+from ..obs import trace as obs_trace
+from ..obs.metrics import MetricsRegistry, default_registry
+from ..obs.trace import Tracer
 from . import artifacts
 from .specs import DeploySpec, ExecSpec, PlanSpec
 
@@ -48,21 +51,26 @@ def compile(model, cluster: Cluster,
     exec_spec = exec_spec or ExecSpec()
     if params is None and key is not None:
         params = _init_params(model, key)
-    pico = plan_with_spec(model.graph, cluster, model.input_size,
-                          plan_spec, cost_table=cost_table)
-    if exec_spec.calibrate:
-        from ..exec.calibrate import calibrate_plan
-        if params is None:
-            params = _init_params(model, key)
-        report = calibrate_plan(model, params, pico.pipeline.stages,
-                                backend=exec_spec.backend,
-                                iters=exec_spec.calibrate_iters)
-        cost_table = report.table()
+    # the deployment's tracer captures its whole lifecycle: the offline
+    # plan (and calibration) spans land here, and later traced runtime
+    # runs append to the same timeline
+    tracer = Tracer()
+    with obs_trace.scoped(tracer):
         pico = plan_with_spec(model.graph, cluster, model.input_size,
-                              plan_spec, partition=pico.partition,
-                              cost_table=cost_table)
+                              plan_spec, cost_table=cost_table)
+        if exec_spec.calibrate:
+            from ..exec.calibrate import calibrate_plan
+            if params is None:
+                params = _init_params(model, key)
+            report = calibrate_plan(model, params, pico.pipeline.stages,
+                                    backend=exec_spec.backend,
+                                    iters=exec_spec.calibrate_iters)
+            cost_table = report.table()
+            pico = plan_with_spec(model.graph, cluster, model.input_size,
+                                  plan_spec, partition=pico.partition,
+                                  cost_table=cost_table)
     return Deployment(model, cluster, plan_spec, exec_spec, pico,
-                      cost_table=cost_table, params=params)
+                      cost_table=cost_table, params=params, tracer=tracer)
 
 
 def _init_params(model, key=None):
@@ -83,11 +91,22 @@ class Deployment:
     cost_table: CostTable | None = None
     params: object = field(default=None, repr=False, compare=False)
     _runner: object = field(default=None, repr=False, compare=False)
+    #: span sink for the deployment lifecycle — plan/calibrate spans
+    #: from :func:`compile`, plus every runtime run started with
+    #: ``DeploySpec(trace=True)``.  Export with ``tracer.save(path)``.
+    tracer: object = field(default=None, repr=False, compare=False)
+    #: deployment-scoped metrics registry; runtime runs with
+    #: ``DeploySpec(metrics=True)`` (the default) publish here.
+    metrics: object = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         # the executable-cache bound is process-global; a deployment
         # carrying one applies it the same way on compile and on load
         self.exec_spec.apply_cache_limit()
+        if self.tracer is None:
+            self.tracer = Tracer()
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
 
     # ---------------- plan views ----------------
 
@@ -173,6 +192,34 @@ class Deployment:
         from ..core.simulate import simulate
         return simulate(self.pico.pipeline, frames, cluster=self.cluster)
 
+    # ---------------- observability ----------------
+
+    def metrics_snapshot(self, meta: Mapping | None = None) -> dict:
+        """Versioned metrics-snapshot document for this deployment.
+
+        Merges the deployment-scoped registry (runtime frame/monitor
+        series from runs with ``DeploySpec(metrics=True)``) with the
+        process-default registry (executable-cache hits/misses/
+        evictions, per-segment compile wall-times, ``conv.fallback``
+        counts) into one
+        :meth:`~repro.obs.metrics.MetricsRegistry.snapshot` envelope —
+        see :func:`repro.obs.metrics.open_snapshot`/``flatten`` for the
+        reader side.
+        """
+        reg = MetricsRegistry()
+        reg.merge(self.metrics)
+        reg.merge(default_registry())
+        base = {"model": getattr(self.model, "name", "model"),
+                "devices": len(self.cluster),
+                "stages": len(self.pico.pipeline.stages)}
+        base.update(meta or {})
+        return reg.snapshot(meta=base)
+
+    def save_trace(self, path: str | os.PathLike) -> str:
+        """Write the lifecycle trace as Perfetto-loadable Chrome-trace
+        JSON (one process row per device); returns the path."""
+        return self.tracer.save(path)
+
     # ---------------- online forms ----------------
 
     def runtime(self, deploy_spec: DeploySpec | None = None, *,
@@ -192,6 +239,10 @@ class Deployment:
                   config=spec.to_runtime_config(), churn=churn,
                   plan_spec=self.plan_spec, exec_spec=self.exec_spec,
                   cost_table=self.cost_table)
+        if spec.trace:
+            kw["tracer"] = self.tracer       # append to the lifecycle trace
+        if spec.metrics:
+            kw["metrics"] = self.metrics     # publish into this deployment
         if real:
             return PipelineRuntime(model=self.model, params=self.params,
                                    **kw)

@@ -142,7 +142,9 @@ class ExecSpec(_SpecBase):
     executable cache (applied whenever a Deployment carrying the spec
     is built or loaded).  ``calibrate`` makes :func:`repro.api.compile`
     time each stage and re-plan on the measured
-    :class:`~repro.core.cost.CostTable`.
+    :class:`~repro.core.cost.CostTable`.  ``profile`` wraps every stage
+    invocation in a ``jax.profiler`` trace annotation so stages show up
+    named in XLA profiles (opt-in; no-op when the profiler is absent).
     """
 
     backend: str | None = None
@@ -152,6 +154,7 @@ class ExecSpec(_SpecBase):
     cache_size: int | None = None
     calibrate: bool = False
     calibrate_iters: int = 3
+    profile: bool = False       # jax.profiler bracket around each stage call
 
     def __post_init__(self):
         if self.mode not in _EXEC_MODES:
@@ -198,7 +201,8 @@ class DeploySpec(_SpecBase):
     drift_cooldown: int = 24
     ewma_beta: float = 0.3
     migration_bandwidth: float | None = None
-    trace: bool = False
+    trace: bool = False         # record repro.obs spans during runs
+    metrics: bool = True        # publish runtime metrics (repro.obs)
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -235,7 +239,8 @@ class DeploySpec(_SpecBase):
             ewma_beta=self.ewma_beta,
             migration_bandwidth=self.migration_bandwidth,
             max_batch=self.max_batch,
-            trace=self.trace)
+            trace=self.trace,
+            metrics=self.metrics)
 
 
 SPEC_KINDS = {cls.__name__: cls for cls in (PlanSpec, ExecSpec, DeploySpec)}

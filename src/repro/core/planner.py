@@ -13,6 +13,7 @@ from typing import Sequence
 
 from ..api._compat import _UNSET, pick, unset, warn_legacy
 from ..api.specs import PlanSpec
+from ..obs import trace as obs_trace
 from .graph import Graph
 from .cost import Cluster, CostTable, stage_cost
 from .partition import (Piece, PartitionResult, partition_graph,
@@ -64,29 +65,33 @@ def plan_with_spec(
     costs for the analytic alpha model in every stage costing.
     """
     spec = spec or PlanSpec()
-    if partition is not None:
-        if pieces is not None:
-            raise ValueError("pass pieces= or partition=, not both")
-        part = PartitionResult.from_pieces(
-            partition.pieces, states_explored=partition.states_explored,
-            wall_time_s=partition.wall_time_s)
-    elif pieces is not None:
-        part = PartitionResult.from_pieces(pieces)
-    else:
-        n_split = spec.resolve_n_split(len(cluster))
-        if len(g.layers) > spec.dnc_threshold:
-            part = partition_graph_dnc(g, input_size, n_split,
-                                       spec.max_diameter)
+    with obs_trace.current().wall_span(
+            "plan", n_devices=len(cluster), n_layers=len(g.layers),
+            reuse_partition=partition is not None or pieces is not None,
+            measured_costs=cost_table is not None):
+        if partition is not None:
+            if pieces is not None:
+                raise ValueError("pass pieces= or partition=, not both")
+            part = PartitionResult.from_pieces(
+                partition.pieces, states_explored=partition.states_explored,
+                wall_time_s=partition.wall_time_s)
+        elif pieces is not None:
+            part = PartitionResult.from_pieces(pieces)
         else:
-            part = partition_graph(g, input_size, n_split,
-                                   spec.max_diameter)
+            n_split = spec.resolve_n_split(len(cluster))
+            if len(g.layers) > spec.dnc_threshold:
+                part = partition_graph_dnc(g, input_size, n_split,
+                                           spec.max_diameter)
+            else:
+                part = partition_graph(g, input_size, n_split,
+                                       spec.max_diameter)
 
-    homo = cluster.homogenized()
-    dp = PipelineDP(g, part.pieces, homo, input_size, spec.t_lim,
-                    cost_table=cost_table)
-    homo_plan = dp.build()
-    final = adjust_stages(homo_plan, cluster, g, input_size,
-                          cost_table=cost_table)
+        homo = cluster.homogenized()
+        dp = PipelineDP(g, part.pieces, homo, input_size, spec.t_lim,
+                        cost_table=cost_table)
+        homo_plan = dp.build()
+        final = adjust_stages(homo_plan, cluster, g, input_size,
+                              cost_table=cost_table)
     return PicoPlan(part, final)
 
 

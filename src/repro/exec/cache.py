@@ -5,15 +5,24 @@ NOT on model object identity — so a re-plan that reproduces the same
 stage structure, or a rebuilt but identical model, reuses the existing
 jitted executable instead of re-tracing.  Bounded LRU: past ``maxsize``
 the least-recently-used entry is dropped.
+
+Observability: every probe emits a ``cache.lookup`` instant (and every
+miss a ``compile`` span with its build wall-time) into the active
+tracer (:func:`repro.obs.trace.current`), and the hit/miss/eviction
+counters are published into the process-default metrics registry by a
+registered collector — hot paths only bump plain ints.
 """
 
 from __future__ import annotations
 
+import time as _time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 from .compiler import CompiledStage, segment_signature
+from ..obs import trace as obs_trace
+from ..obs.metrics import default_registry
 from ..pipeline.halo import tile_signature
 
 
@@ -41,6 +50,18 @@ class CacheStats:
 _CACHE: "OrderedDict[tuple, CompiledStage]" = OrderedDict()
 _STATS = CacheStats()
 _MAXSIZE = 256
+
+
+def _publish_stats(reg) -> None:
+    """Collector: mirror the cache counters into a metrics registry at
+    snapshot time (the hot path only bumps the plain ints above)."""
+    reg.gauge("exec.cache.hits").set(_STATS.hits)
+    reg.gauge("exec.cache.misses").set(_STATS.misses)
+    reg.gauge("exec.cache.evictions").set(_STATS.evictions)
+    reg.gauge("exec.cache.entries").set(len(_CACHE))
+
+
+default_registry().register_collector(_publish_stats)
 
 
 def cache_stats() -> CacheStats:
@@ -93,13 +114,26 @@ def compiled_stage(model, nodes, plans, needs: Sequence, sinks: Sequence,
                           relu=relu, donate=donate, boundary=boundary,
                           static_key=static_key)
     hit = _CACHE.get(key)
+    tr = obs_trace.current()
     if hit is not None:
         _STATS.hits += 1
         _CACHE.move_to_end(key)
+        if tr:
+            tr.instant("cache.lookup", _time.perf_counter() - tr.epoch,
+                       hit=True)
         return hit
     _STATS.misses += 1
+    if tr:
+        tr.instant("cache.lookup", _time.perf_counter() - tr.epoch,
+                   hit=False)
+    t0 = _time.perf_counter()
     cs = CompiledStage(model, nodes, plans, needs, sinks, backend=backend,
                        relu=relu, donate=donate)
+    build_s = _time.perf_counter() - t0
+    default_registry().histogram("exec.compile.build_s").observe(build_s)
+    if tr:
+        tr.emit("compile", t0 - tr.epoch, build_s,
+                n_nodes=len(nodes), backend=backend or "default")
     _CACHE[key] = cs
     while len(_CACHE) > _MAXSIZE:
         _CACHE.popitem(last=False)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.cost import CostTable
+from ..obs import trace as obs_trace
+from ..obs.metrics import default_registry
 
 
 def measure_host_flops(n: int = 512, iters: int = 5) -> float:
@@ -87,16 +89,19 @@ def calibrate_plan(model, params, stages: Sequence, *,
     report = CalibrationReport(host_flops)
     produced: dict = {}
     for si, st in enumerate(stages):
-        ex = StageExecutor(model, st.nodes, list(st.fractions),
-                           name=f"calib{si}", backend=backend)
-        outs = ex(params, produced, image)          # compile + warm
-        jax.block_until_ready(outs)
-        best = float("inf")
-        for _ in range(max(1, iters)):
-            t0 = time.perf_counter()
-            jax.block_until_ready(ex(params, produced, image))
-            best = min(best, time.perf_counter() - t0)
+        with obs_trace.current().wall_span("calibrate", stage=si,
+                                           n_nodes=len(st.nodes)):
+            ex = StageExecutor(model, st.nodes, list(st.fractions),
+                               name=f"calib{si}", backend=backend)
+            outs = ex(params, produced, image)          # compile + warm
+            jax.block_until_ready(outs)
+            best = float("inf")
+            for _ in range(max(1, iters)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(ex(params, produced, image))
+                best = min(best, time.perf_counter() - t0)
         flops = float(sum(st.cost.seg.per_device_flops))
+        default_registry().histogram("exec.calibrate.stage_s").observe(best)
         report.stages.append(StageCalibration(
             si, frozenset(st.nodes), flops, best, flops / host_flops))
         produced.update(outs)

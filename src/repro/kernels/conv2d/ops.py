@@ -1,11 +1,14 @@
 """jit'd public wrapper for the conv2d Pallas kernel with shape guards."""
 
+import time as _time
 import warnings
 
 import jax
 
 from .conv2d import conv2d as _conv2d_pallas
 from .ref import conv2d_ref
+from ...obs import trace as obs_trace
+from ...obs.metrics import default_registry
 
 _warned: set[tuple] = set()
 
@@ -14,16 +17,40 @@ def _warn_once(key: tuple, msg: str) -> None:
     if key in _warned:
         return
     _warned.add(key)
-    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    warnings.warn(msg, RuntimeWarning, stacklevel=4)
+
+
+def _fallback(reason: str, x_shape: tuple, w_shape: tuple,
+              stride: tuple, msg: str) -> None:
+    """Account one Pallas->XLA fallback: a ``conv.fallback`` counter
+    labelled with the offending shape/stride (countable per run via
+    ``Deployment.metrics_snapshot()``), a ``conv.fallback`` instant in
+    the active tracer, and the once-per-shape RuntimeWarning."""
+    default_registry().counter(
+        "conv.fallback", reason=reason, x_shape=str(x_shape),
+        w_shape=str(w_shape), stride=str(stride)).inc()
+    tr = obs_trace.current()
+    if tr:
+        tr.instant("conv.fallback", _time.perf_counter() - tr.epoch,
+                   reason=reason, x_shape=x_shape, w_shape=w_shape,
+                   stride=stride)
+    _warn_once((reason, x_shape, w_shape, stride), msg)
+
+
+def fallback_count() -> int:
+    """Total Pallas->XLA fallbacks recorded this process (all shapes)."""
+    return int(default_registry().total("conv.fallback"))
 
 
 def conv2d(x: jax.Array, w: jax.Array, *, stride: tuple[int, int] = (1, 1),
            use_pallas: bool = True, interpret: bool = False) -> jax.Array:
     """VALID NHWC conv.  The Pallas implicit-GEMM kernel handles the
     stride-1 case; strided or kernel-unsupported shapes fall back to the
-    XLA reference *inside this wrapper* (warning once per shape), so the
-    caller's backend choice is honored for every conv in a segment
-    instead of silently bypassing it.
+    XLA reference *inside this wrapper*, so the caller's backend choice
+    is honored for every conv in a segment instead of silently bypassing
+    it.  Each fallback is structured — a labelled ``conv.fallback``
+    metric plus a trace instant carrying the shape and stride — and
+    still warns once per distinct shape.
     """
     N, H, W, CI = x.shape
     KH, KW, CI2, CO = w.shape
@@ -31,13 +58,13 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: tuple[int, int] = (1, 1),
     if not use_pallas:
         return conv2d_ref(x, w, stride)
     if stride != (1, 1):
-        _warn_once(("stride", stride, w.shape),
-                   f"conv2d: Pallas kernel is stride-1 only; stride={stride} "
-                   f"conv {w.shape} falls back to the XLA reference")
+        _fallback("stride", tuple(x.shape), tuple(w.shape), tuple(stride),
+                  f"conv2d: Pallas kernel is stride-1 only; stride={stride} "
+                  f"conv {w.shape} falls back to the XLA reference")
         return conv2d_ref(x, w, stride)
     if H < KH or W < KW:
-        _warn_once(("shape", x.shape, w.shape),
-                   f"conv2d: input {x.shape} smaller than kernel {w.shape}; "
-                   "falling back to the XLA reference")
+        _fallback("shape", tuple(x.shape), tuple(w.shape), tuple(stride),
+                  f"conv2d: input {x.shape} smaller than kernel {w.shape}; "
+                  "falling back to the XLA reference")
         return conv2d_ref(x, w, stride)
     return _conv2d_pallas(x, w, interpret=interpret)

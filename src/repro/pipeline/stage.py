@@ -33,6 +33,7 @@ class StageExecutor:
     mode: str = "compiled"           # "compiled" | "eager"
     donate: bool = False             # donate boundary buffers to XLA — only
     #                                  safe when the caller won't reuse them
+    profile: bool = False            # jax.profiler annotation per call
 
     def __post_init__(self):
         g = self.model.graph
@@ -64,9 +65,10 @@ class StageExecutor:
     def __call__(self, params, produced: Mapping[str, jax.Array],
                  image: jax.Array | None = None) -> dict[str, jax.Array]:
         boundary = self.boundary_inputs(produced, image)
-        if self.mode == "eager":
-            return self._run_eager(params, boundary)
-        return self._executable(boundary)(params, boundary)
+        with self._profiler_bracket():
+            if self.mode == "eager":
+                return self._run_eager(params, boundary)
+            return self._executable(boundary)(params, boundary)
 
     def run_frames(self, params, produced: Mapping[str, jax.Array],
                    images: jax.Array | None = None) -> dict[str, jax.Array]:
@@ -75,15 +77,26 @@ class StageExecutor:
         the same way.  Compiled mode scans the stack in one dispatch;
         eager mode loops frames through the oracle path and stacks."""
         boundary = self.boundary_inputs(produced, images)
-        if self.mode == "eager":
-            n = next(iter(boundary.values())).shape[0]
-            per = [self._run_eager(params, {k: v[f] for k, v in
-                                            boundary.items()})
-                   for f in range(n)]
-            return {s: jnp.stack([o[s] for o in per]) for s in self.sinks}
-        return self._executable(boundary).run_frames(params, boundary)
+        with self._profiler_bracket():
+            if self.mode == "eager":
+                n = next(iter(boundary.values())).shape[0]
+                per = [self._run_eager(params, {k: v[f] for k, v in
+                                                boundary.items()})
+                       for f in range(n)]
+                return {s: jnp.stack([o[s] for o in per])
+                        for s in self.sinks}
+            return self._executable(boundary).run_frames(params, boundary)
 
     # ------------------------------------------------------------------
+
+    def _profiler_bracket(self):
+        """Opt-in ``jax.profiler`` named bracket (ExecSpec.profile) so
+        per-stage work shows up labelled in XLA device profiles; the
+        no-profile path costs one method call."""
+        if not self.profile:
+            from contextlib import nullcontext
+            return nullcontext()
+        return jax.profiler.TraceAnnotation(self.name)
 
     def _executable(self, boundary):
         from ..exec.cache import compiled_stage
@@ -117,9 +130,11 @@ def executors_from_plan(model: "CNNDef", stages: Sequence[StagePlan],  # noqa: F
     stages of one plan share boundary tensors, so donation here would
     let XLA clobber buffers a later stage still reads (single-stage
     callers opt in via the explicit ``donate=`` argument)."""
+    profile = False
     if spec is not None:
         backend, mode = spec.backend, spec.mode
+        profile = getattr(spec, "profile", False)
     return [StageExecutor(model, st.nodes, list(st.fractions),
                           name=f"stage{si}", backend=backend, mode=mode,
-                          donate=donate)
+                          donate=donate, profile=profile)
             for si, st in enumerate(stages)]

@@ -55,6 +55,9 @@ from ..core.cost import Cluster, CostTable
 from ..core.pipeline_dp import StagePlan
 from ..core.planner import PicoPlan, plan_with_spec, recost
 from ..core.graph import Graph
+from ..obs import trace as obs_trace
+from ..obs.metrics import MetricsRegistry, NULL_REGISTRY
+from ..obs.trace import NULL_TRACER, Tracer
 from .actors import ActorPool
 from .churn import (ChurnEvent, DeviceJoin, DeviceLeave, FreqScale,
                     LinkDegrade)
@@ -82,7 +85,8 @@ class RuntimeConfig:
     ewma_beta: float = 0.3
     migration_bandwidth: float | None = None    # None = cluster bandwidth
     max_batch: int = 1              # stage-0 coalescing cap (1 = no batching)
-    trace: bool = False
+    trace: bool = False             # record structured spans (repro.obs)
+    metrics: bool = True            # publish runtime metrics (repro.obs)
 
     @classmethod
     def ideal(cls, seed: int = 0) -> "RuntimeConfig":
@@ -173,7 +177,7 @@ class RuntimeReport:
     restarts: int = 0
     dropped: int = 0                # deadline-expired while queued
     outputs: dict[int, dict] = field(default_factory=dict)
-    trace: list[tuple] = field(default_factory=list)
+    trace: list = field(default_factory=list)   # obs.Span records (if traced)
 
     @property
     def avg_utilization(self) -> float:
@@ -222,6 +226,9 @@ class PipelineRuntime:
         cost_table: CostTable | None = None,  # measured costs (exec.calibrate)
         plan_spec: PlanSpec | None = None,
         exec_spec: ExecSpec | None = None,
+        tracer: "Tracer | None" = None,       # shared span sink (repro.obs)
+        metrics: "MetricsRegistry | None" = None,
+        trace_labels: dict | None = None,     # attrs on every span (tenant=..)
     ):
         if model is not None:
             g = model.graph
@@ -249,8 +256,14 @@ class PipelineRuntime:
         self.pico = pico or plan_with_spec(g, cluster, input_size,
                                            self.plan_spec,
                                            cost_table=cost_table)
+        self.tracer = tracer if tracer is not None else (
+            Tracer() if self.config.trace else NULL_TRACER)
+        self.metrics = metrics if metrics is not None else (
+            MetricsRegistry() if self.config.metrics else NULL_REGISTRY)
+        self._labels = dict(trace_labels or {})
         self.monitor = Monitor(beta=self.config.ewma_beta,
-                               drift_threshold=self.config.drift_threshold)
+                               drift_threshold=self.config.drift_threshold,
+                               metrics=self.metrics)
         self.pool = ActorPool(cluster.devices,
                               mem_budget_bytes=self.config.mem_budget_bytes)
         self.links = LinkMap(LinkModel(
@@ -259,7 +272,7 @@ class PipelineRuntime:
             jitter_s=self.config.link_jitter_s))
         self.churn = sorted(churn, key=lambda c: c.time)
         self.replans: list[ReplanRecord] = []
-        self._trace: list[tuple] = []
+        self._drain_started = 0.0
         # alpha ratios the current plan was built with (drift baseline)
         self._plan_ratios: dict[str, float] = {}
         self._samples_at_replan = 0
@@ -285,8 +298,7 @@ class PipelineRuntime:
             # compiled executors: across re-plans, stages whose segment +
             # tiling survive come straight from the executable cache
             execs = executors_from_plan(self.model, self.pico.pipeline.stages,
-                                        backend=self.backend,
-                                        mode=self.exec_spec.mode)
+                                        spec=self.exec_spec)
             for st, ex in zip(self.stages, execs):
                 st.executor = ex
 
@@ -348,13 +360,16 @@ class PipelineRuntime:
         for ce in self.churn:
             self.q.push(ce.time, EventKind.CHURN, churn=ce)
         now = 0.0
-        while self._completed + self._dropped < n_frames:
-            ev = self.step()
-            if ev is None:
-                raise RuntimeError(
-                    f"runtime deadlock: {self._completed}/{n_frames} frames "
-                    f"done, draining={self._draining}")
-            now = ev.time
+        # activate this run's tracer so library-level spans (plan
+        # passes, executable-cache lookups/compiles) land on it too
+        with obs_trace.scoped(self.tracer):
+            while self._completed + self._dropped < n_frames:
+                ev = self.step()
+                if ev is None:
+                    raise RuntimeError(
+                        f"runtime deadlock: {self._completed}/{n_frames} "
+                        f"frames done, draining={self._draining}")
+                now = ev.time
         return self._report(now)
 
     # ------------------------------------------------------------------
@@ -466,10 +481,11 @@ class PipelineRuntime:
         for d in st.plan.devices:
             if d.name in self.pool:
                 self.pool[d.name].enqueue()
-        if self.config.trace:
+        if self.tracer and s == 0:
             fids = ([item.fid] if isinstance(item, Frame)
                     else [f.fid for f in item.frames])
-            self._trace.append((t, "arrival", s, *fids))
+            self.tracer.instant("sched.admit", t, track="pipeline",
+                                frames=fids, **self._labels)
         self._try_start(t, s)
 
     def _coalesce(self, t: float, queue: deque) -> "_Batch | None":
@@ -479,10 +495,16 @@ class PipelineRuntime:
         for fr in expired:
             fr.dropped = True
             self._dropped += 1
-            if self.config.trace:
-                self._trace.append((t, "expired", 0, fr.fid))
+            self.metrics.counter("runtime.frames_dropped").inc()
+            if self.tracer:
+                self.tracer.instant("frame.expired", t, track="pipeline",
+                                    frame=fr.fid, **self._labels)
             if self.on_drop is not None:
                 self.on_drop(fr, t)
+        if self.tracer and len(frames) > 1:
+            self.tracer.instant("sched.coalesce", t, track="pipeline",
+                                frames=[f.fid for f in frames],
+                                **self._labels)
         return _Batch(frames) if frames else None
 
     def _try_start(self, t: float, s: int) -> None:
@@ -510,15 +532,17 @@ class PipelineRuntime:
             act.start_work(t, true_dur, mem)
             durs.append(true_dur)
             modeled.append(nominal)
+            if self.tracer:
+                self.tracer.emit("stage.compute", t, true_dur,
+                                 track=dev.name, stage=s, frames=b,
+                                 modeled_s=nominal, observed_s=true_dur,
+                                 **self._labels)
         dur = max(durs)
         if st.executor is not None:
             self._exec_batch(st, batch)
         st.pending = self.q.push(t + dur, EventKind.COMPUTE_DONE,
                                  stage=s, batch=batch,
                                  modeled=modeled, observed=durs)
-        if self.config.trace:
-            self._trace.append((t, "compute", s,
-                                [f.fid for f in batch.frames], dur))
 
     def _exec_batch(self, st: _StageState, batch: "_Batch") -> None:
         """Real numerics for one batch: single frames keep the seed's
@@ -555,6 +579,15 @@ class PipelineRuntime:
         intra = st.plan.cost.t_comm * hop.degradation * b
         inter = hop.transfer_time(sum(st.plan.cost.seg.out_bytes) * b,
                                   self.rng)
+        if self.tracer:
+            if intra > 0:
+                self.tracer.emit("halo.exchange", t, intra,
+                                 track=st.plan.devices[0].name, stage=s,
+                                 **self._labels)
+            if inter > 0:
+                self.tracer.emit("stage.comm", t + intra, inter,
+                                 track=f"link:{s}", stage=s,
+                                 frames=b, **self._labels)
         st.pending = self.q.push(t + intra + inter, EventKind.STAGE_DONE,
                                  stage=s, batch=batch)
 
@@ -565,9 +598,6 @@ class PipelineRuntime:
         st.pending = None
         for frame in batch.frames:
             frame.next_piece = st.plan.last_piece + 1
-        if self.config.trace:
-            self._trace.append((t, "done", s,
-                                *[f.fid for f in batch.frames]))
         if s + 1 < len(self.stages):
             self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s + 1, batch=batch)
         else:
@@ -576,6 +606,13 @@ class PipelineRuntime:
             for frame in batch.frames:
                 frame.done = t
                 self._completed += 1
+                self.metrics.counter("runtime.frames_completed").inc()
+                self.metrics.histogram("frame.latency_s").observe(
+                    t - frame.arrival)
+                if self.tracer:
+                    self.tracer.emit("frame", frame.arrival,
+                                     t - frame.arrival, track="pipeline",
+                                     frame=frame.fid, **self._labels)
                 out = None
                 if frame.produced and self.model is not None:
                     out = {k: frame.produced[k] for k in sinks}
@@ -610,8 +647,11 @@ class PipelineRuntime:
         return False
 
     def _on_churn(self, t: float, ce: ChurnEvent) -> None:
-        if self.config.trace:
-            self._trace.append((t, "churn", type(ce).__name__))
+        self.metrics.counter("runtime.churn_events",
+                             kind=type(ce).__name__).inc()
+        if self.tracer:
+            self.tracer.instant("churn", t, track="control",
+                                kind=type(ce).__name__, **self._labels)
         if isinstance(ce, LinkDegrade):
             self.links.degrade(ce.factor, ce.hop)
             return                       # plan unchanged; costs just grew
@@ -669,6 +709,7 @@ class PipelineRuntime:
             return
         self._draining = True
         self._drain_reason = reason
+        self._drain_started = t
         if self._all_idle():
             self._do_replan(t)
 
@@ -685,20 +726,23 @@ class PipelineRuntime:
             names = frozenset(d.name for d in st.devices)
             for p in range(st.first_piece, st.last_piece + 1):
                 old_hosts[p] = names
-        new = plan_with_spec(self.g, calibrated, self.input_size,
-                             self.plan_spec, partition=old.partition,
-                             cost_table=self.cost_table)
-        # keep the incumbent plan if it is still runnable and wins when
-        # both are priced with measured costs (the DP must use every
-        # device, so a fresh plan can lose — e.g. after a weak join)
-        alive_names = {d.name for d in alive}
-        incumbent_ok = all(d.name in alive_names
-                           for st in old.pipeline.stages for d in st.devices)
-        if incumbent_ok:
-            old_rc = recost(old.pipeline, calibrated, self.g,
-                            self.input_size, cost_table=self.cost_table)
-            if old_rc.period <= new.period:
-                new = PicoPlan(old.partition, old_rc)
+        with obs_trace.scoped(self.tracer):
+            new = plan_with_spec(self.g, calibrated, self.input_size,
+                                 self.plan_spec, partition=old.partition,
+                                 cost_table=self.cost_table)
+            # keep the incumbent plan if it is still runnable and wins
+            # when both are priced with measured costs (the DP must use
+            # every device, so a fresh plan can lose — e.g. after a
+            # weak join)
+            alive_names = {d.name for d in alive}
+            incumbent_ok = all(
+                d.name in alive_names
+                for st in old.pipeline.stages for d in st.devices)
+            if incumbent_ok:
+                old_rc = recost(old.pipeline, calibrated, self.g,
+                                self.input_size, cost_table=self.cost_table)
+                if old_rc.period <= new.period:
+                    new = PicoPlan(old.partition, old_rc)
         mig_bytes = 0.0
         for st in new.pipeline.stages:
             names = frozenset(d.name for d in st.devices)
@@ -710,6 +754,17 @@ class PipelineRuntime:
         self.replans.append(ReplanRecord(
             t, self._drain_reason, wall, old.period, new.period,
             len(alive), mig_bytes, mig_s))
+        self.metrics.counter("runtime.replans",
+                             reason=self._drain_reason).inc()
+        if self.tracer:
+            if t > self._drain_started:
+                self.tracer.emit("sched.drain", self._drain_started,
+                                 t - self._drain_started, track="control",
+                                 reason=self._drain_reason, **self._labels)
+            self.tracer.emit("replan", t, mig_s, track="control",
+                             reason=self._drain_reason, wall_s=wall,
+                             old_period=old.period, new_period=new.period,
+                             migration_bytes=mig_bytes, **self._labels)
         self.pico = new
         self._plan_ratios = {d.name: self.monitor.device_ratio(d.name)
                              for d in alive}
@@ -743,8 +798,6 @@ class PipelineRuntime:
             else:
                 self.q.push(t, EventKind.FRAME_ARRIVAL, stage=s,
                             batch=_Batch([frame]))
-        if self.config.trace:
-            self._trace.append((t, "migrated", len(inflight)))
         if self._deferred_replan is not None:
             reason, self._deferred_replan = self._deferred_replan, None
             self._request_replan(t, reason)
@@ -781,5 +834,5 @@ class PipelineRuntime:
             restarts=sum(f.restarts for f in self._all_frames),
             dropped=self._dropped,
             outputs=self._outputs,
-            trace=list(self._trace),
+            trace=list(self.tracer.spans),
         )

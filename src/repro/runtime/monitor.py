@@ -7,6 +7,13 @@ should absorb: ``calibrated_cluster`` returns a cluster whose devices
 carry ``alpha * ewma`` so that the *next* ``planner.plan`` call
 optimizes against measured, not assumed, compute rates — the DynO-style
 feedback loop (PAPERS.md).
+
+The monitor publishes every sample into a
+:class:`~repro.obs.metrics.MetricsRegistry` (``monitor.samples``
+counter, per-stage ``stage.observed_s`` histograms, per-device
+``monitor.ratio`` gauges) instead of keeping the numbers to itself —
+the EWMA cells stay as the planner-facing view, the registry is the
+export surface.
 """
 
 from __future__ import annotations
@@ -14,6 +21,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 
 from ..core.cost import Cluster
+from ..obs.metrics import NULL_REGISTRY
 
 
 @dataclass
@@ -36,14 +44,26 @@ class Monitor:
     ratio: dict[str, EWMA] = field(default_factory=dict)
     stage_time: dict[int, EWMA] = field(default_factory=dict)
     samples: int = 0
+    metrics: object = NULL_REGISTRY     # MetricsRegistry (or the no-op)
 
     def record(self, stage: int, device_name: str,
                modeled_s: float, observed_s: float) -> None:
+        """Fold one (modeled, observed) compute sample into the EWMAs
+        and publish it to the metrics registry.  ``modeled_s <= 0``
+        contributes no ratio (there is nothing to normalize by) but
+        still counts as a sample and a stage-time observation."""
         self.samples += 1
         if modeled_s > 0:
-            self.ratio.setdefault(
-                device_name, EWMA(self.beta)).update(observed_s / modeled_s)
+            ew = self.ratio.setdefault(device_name, EWMA(self.beta))
+            ew.update(observed_s / modeled_s)
+            self.metrics.gauge("monitor.ratio", device=device_name).set(
+                ew.value)
         self.stage_time.setdefault(stage, EWMA(self.beta)).update(observed_s)
+        m = self.metrics
+        if m:
+            m.counter("monitor.samples").inc()
+            m.histogram("stage.observed_s", stage=stage).observe(observed_s)
+            m.histogram("stage.modeled_s", stage=stage).observe(modeled_s)
 
     def device_ratio(self, name: str) -> float:
         ew = self.ratio.get(name)

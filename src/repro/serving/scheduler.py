@@ -41,6 +41,9 @@ from ..core.cost import Cluster, CostTable
 from ..core.planner import PicoPlan, partition_cluster, split_devices
 from ..data.pipeline import Request
 from ..exec.cache import CacheStats, cache_stats
+from ..obs import trace as obs_trace
+from ..obs.metrics import MetricsRegistry, NULL_REGISTRY
+from ..obs.trace import NULL_TRACER, Tracer
 from ..runtime import (DeviceJoin, DeviceLeave, PipelineRuntime,
                        RuntimeConfig)
 from ..runtime.events import EventKind, EventQueue
@@ -116,10 +119,33 @@ class ServeReport:
     device_busy_s: dict[str, float]
     device_frames: dict[str, int]
     cache: CacheStats               # compile hits/misses during this serve
+    metrics: object = None          # shared MetricsRegistry (if enabled)
+    trace: list = field(default_factory=list)   # obs.Span records (if traced)
 
     @property
     def served(self) -> int:
         return sum(s.served for s in self.tenants.values())
+
+    def metrics_snapshot(self, meta: Mapping | None = None) -> dict:
+        """Versioned metrics-snapshot document for this serve.
+
+        Merges the scheduler's shared runtime registry (if metrics were
+        enabled), per-tenant :meth:`ServeStats.publish` series, report
+        scalars, and the process-default registry (executable-cache and
+        conv-fallback counters) into one
+        :meth:`~repro.obs.metrics.MetricsRegistry.snapshot` envelope.
+        """
+        from ..obs.metrics import default_registry
+        reg = MetricsRegistry()
+        if isinstance(self.metrics, MetricsRegistry):
+            reg.merge(self.metrics)
+        for name, st in self.tenants.items():
+            st.publish(reg, tenant=name)
+        reg.gauge("serve.makespan_s").set(self.makespan)
+        reg.gauge("serve.dropped_inflight").set(self.dropped_inflight)
+        reg.gauge("serve.repartitions").set(len(self.repartitions))
+        reg.merge(default_registry())
+        return reg.snapshot(meta=meta)
 
     @property
     def throughput_per_min(self) -> float:
@@ -191,6 +217,11 @@ class ServingScheduler:
         self.config = config or SchedulerConfig()
         self.exec_spec = exec_spec or ExecSpec(backend=pick(backend, None))
         self.cost_table = cost_table
+        rc = self.config.runtime
+        # one shared span sink + registry across every tenant runtime,
+        # so the whole serve renders on a single Perfetto timeline
+        self.tracer = Tracer() if rc.trace else NULL_TRACER
+        self.metrics = MetricsRegistry() if rc.metrics else NULL_REGISTRY
         self._devices = list(cluster.devices)
         self._tenants: dict[str, _TenantState] = {
             t.name: _TenantState(t) for t in tenants}
@@ -240,7 +271,9 @@ class ServingScheduler:
         kw = dict(cluster=ts.share.cluster, pico=ts.share.pico,
                   plan_spec=ts.cfg.planner_spec(), exec_spec=self.exec_spec,
                   cost_table=self.cost_table,
-                  config=self._runtime_config(ts, generation))
+                  config=self._runtime_config(ts, generation),
+                  tracer=self.tracer, metrics=self.metrics,
+                  trace_labels={"tenant": ts.cfg.name})
         if ts.params is not None:
             rt = PipelineRuntime(model=ts.cfg.model, params=ts.params, **kw)
         else:
@@ -315,24 +348,28 @@ class ServingScheduler:
                 control.push(ce.time, EventKind.CHURN, churn=ce)
         control.push(self.config.control_interval_s, EventKind.CONTROL_TICK)
 
-        for ts in self._tenants.values():
-            self._build_runtime(ts, self._generation, paused=False)
+        # scope the shared tracer over the whole serve so library-level
+        # spans (plan passes, executable-cache lookups/compiles) from
+        # every tenant land on this serve's timeline
+        with obs_trace.scoped(self.tracer):
+            for ts in self._tenants.values():
+                self._build_runtime(ts, self._generation, paused=False)
 
-        while True:
-            pick = self._next_source()
-            if pick is None:
+            while True:
+                pick = self._next_source()
+                if pick is None:
+                    if self._drain_pending and self._all_idle():
+                        self._finish_repartition(self._now)
+                        continue
+                    break
+                t, _, ts = pick
+                self._now = t
+                if ts is None:
+                    self._handle_control(self._control.pop())
+                else:
+                    ts.rt.step()
                 if self._drain_pending and self._all_idle():
                     self._finish_repartition(self._now)
-                    continue
-                break
-            t, _, ts = pick
-            self._now = t
-            if ts is None:
-                self._handle_control(self._control.pop())
-            else:
-                ts.rt.step()
-            if self._drain_pending and self._all_idle():
-                self._finish_repartition(self._now)
 
         return self._report(wall0, cache_mark)
 
@@ -518,6 +555,7 @@ class ServingScheduler:
         if self._drain_pending is not None:
             return                       # already draining; one pass covers it
         self._drain_pending = reason
+        self._drain_started_t = t
         for ts in self._tenants.values():
             if ts.rt is not None:
                 ts.rt.pause()
@@ -594,6 +632,16 @@ class ServingScheduler:
                            generation=self._generation)
         self._last_rebalance_t = t
         self.partition = partition
+        if self.tracer:
+            drain0 = getattr(self, "_drain_started_t", t)
+            if t > drain0:
+                self.tracer.emit("sched.drain", drain0, t - drain0,
+                                 track="scheduler", reason=reason)
+            self.tracer.emit("sched.repartition", t, mig_s,
+                             track="scheduler", reason=reason,
+                             generation=self._generation,
+                             migration_bytes=mig_bytes,
+                             tenants=[ts.cfg.name for ts in active])
         self.repartitions.append(RepartitionRecord(
             time=t, reason=reason, wall_s=_time.perf_counter() - wall0,
             migration_bytes=mig_bytes, migration_s=mig_s,
@@ -629,6 +677,8 @@ class ServingScheduler:
             device_busy_s=dict(self._busy),
             device_frames=dict(self._devframes),
             cache=cache_stats().since(cache_mark),
+            metrics=self.metrics if self.metrics else None,
+            trace=list(self.tracer.spans),
         )
 
 

@@ -19,6 +19,7 @@ import numpy as np
 from ..api._compat import _UNSET, pick, unset, warn_legacy
 from ..api.specs import DeploySpec, ExecSpec, PlanSpec
 from ..core import Cluster, plan_with_spec
+from ..obs.metrics import quantile
 from ..models.cnn.builder import CNNDef
 from ..pipeline.runner import PipelineRunner
 from ..data.pipeline import Request
@@ -97,9 +98,13 @@ class ServeStats:
                 if self.served else 0.0)
 
     def latency_percentile(self, q: float) -> float:
-        if not self.per_request:
-            return 0.0
-        return float(np.percentile(np.asarray(self.per_request), q))
+        """Nearest-rank percentile of per-request latency — well-defined
+        for any window size (``np.percentile``'s linear interpolation
+        degenerates below three samples: p50 of ``[a, b]`` lands between
+        the order statistics instead of on one).  Shares the estimator
+        with :class:`repro.obs.metrics.Histogram` so server stats and
+        metrics snapshots quote identical numbers."""
+        return quantile(self.per_request, q)
 
     @property
     def p50_latency_s(self) -> float:
@@ -121,6 +126,26 @@ class ServeStats:
         if not admitted:
             return 0.0
         return (self.deadline_misses + self.expired) / admitted
+
+    def publish(self, registry, **labels) -> None:
+        """Mirror this accounting into a
+        :class:`~repro.obs.metrics.MetricsRegistry` (``serve.*`` gauges
+        plus a ``serve.latency_s`` histogram), labelled e.g. by tenant.
+        Idempotent per registry: gauges overwrite, the histogram is
+        rebuilt from ``per_request`` only when its count lags."""
+        for name, v in (("serve.served", self.served),
+                        ("serve.rejected", self.rejected),
+                        ("serve.expired", self.expired),
+                        ("serve.deadline_misses", self.deadline_misses),
+                        ("serve.deadline_miss_rate",
+                         self.deadline_miss_rate),
+                        ("serve.mean_latency_s", self.mean_latency_s),
+                        ("serve.period_model_s", self.period_model_s),
+                        ("serve.wall_s", self.wall_s)):
+            registry.gauge(name, **labels).set(v)
+        h = registry.histogram("serve.latency_s", **labels)
+        for lat in self.per_request[h.count:]:
+            h.observe(lat)
 
 
 class PipelineServer:

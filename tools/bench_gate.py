@@ -23,6 +23,21 @@ threshold must not soften (e.g. churn recovery >= 0.95 regardless of
 how high the baseline sits).  A metric missing from the measured run
 fails too — silently dropping a benchmark is itself a regression.
 Exit code 1 on any failure.
+
+The measured file may be any of three shapes:
+
+* legacy ``benchmarks.run --out`` JSON (``{"metrics": {...}, ...}``),
+* a bare flat ``{name: value}`` dict,
+* a versioned ``repro.obs`` metrics snapshot
+  (``{"artifact": "metrics", "version": 1, "payload": {...}}``, as
+  written by ``Deployment.metrics_snapshot()``) — counters and gauges
+  gate by name (labelled series as ``name{k=v,...}``), histograms
+  expand to ``.count/.sum/.mean/.min/.max/.p50/.p95/.p99`` sub-keys.
+
+A ``--out`` file that embeds a ``snapshot`` alongside the legacy
+``metrics`` dict exposes both namespaces (legacy names win on clash).
+The snapshot flattening here is intentionally self-contained: CI runs
+this gate without PYTHONPATH, so it must not import ``repro``.
 """
 
 from __future__ import annotations
@@ -33,13 +48,75 @@ import sys
 
 DEFAULT_THRESHOLD = 0.2
 
+# Newest snapshot schema this gate understands; mirror of
+# repro.obs.metrics.METRICS_SCHEMA_VERSION (kept literal on purpose —
+# no repro import, see module docstring).
+SNAPSHOT_VERSION = 1
+
+
+def _num(v) -> float:
+    """Decode a snapshot number (floats round-trip non-finite values as
+    the strings "Infinity"/"-Infinity"/"NaN")."""
+    return float(v)
+
+
+def flatten_snapshot(doc: dict) -> dict[str, float]:
+    """Flatten a ``repro.obs`` metrics snapshot into ``{name: value}``.
+
+    Matches ``repro.obs.metrics.flatten``: labelled series become
+    ``name{k=v,...}`` (labels sorted by key), histograms expand into
+    ``.count/.sum/.mean/.min/.max`` plus the snapshot's percentile
+    keys (``.p50`` etc.).  Raises ValueError on a newer schema version
+    than this gate understands."""
+    if doc.get("artifact") != "metrics":
+        raise ValueError(f"not a metrics snapshot: "
+                         f"artifact={doc.get('artifact')!r}")
+    version = int(doc.get("version", 0))
+    if version > SNAPSHOT_VERSION:
+        raise ValueError(f"metrics snapshot version {version} is newer "
+                         f"than supported ({SNAPSHOT_VERSION})")
+    payload = doc.get("payload", {})
+
+    def flat_name(name: str, labels: dict) -> str:
+        if not labels:
+            return name
+        inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+        return f"{name}{{{inner}}}"
+
+    out: dict[str, float] = {}
+    for c in payload.get("counters", ()):
+        out[flat_name(c["name"], c.get("labels", {}))] = _num(c["value"])
+    for g in payload.get("gauges", ()):
+        out[flat_name(g["name"], g.get("labels", {}))] = _num(g["value"])
+    for h in payload.get("histograms", ()):
+        base = flat_name(h["name"], h.get("labels", {}))
+        for k, v in h.items():
+            if k in ("count", "sum", "mean", "min", "max") \
+                    or (k.startswith("p") and k[1:].replace(".", "").isdigit()):
+                out[f"{base}.{k}"] = _num(v)
+    return out
+
+
+def metrics_view(measured: dict) -> dict:
+    """Resolve whichever measured-file shape we were handed into one
+    flat ``{name: value}`` map (see module docstring)."""
+    if measured.get("artifact") == "metrics":
+        return flatten_snapshot(measured)
+    metrics = measured.get("metrics", measured)
+    snapshot = measured.get("snapshot")
+    if isinstance(snapshot, dict) and snapshot.get("artifact") == "metrics":
+        merged = flatten_snapshot(snapshot)
+        merged.update(metrics)  # legacy names win on clash
+        return merged
+    return metrics
+
 
 def check(measured: dict, baseline: dict,
           threshold: float | None = None) -> list[str]:
     """Return a list of human-readable failures (empty = gate passes)."""
     thr = threshold if threshold is not None \
         else baseline.get("threshold", DEFAULT_THRESHOLD)
-    metrics = measured.get("metrics", measured)
+    metrics = metrics_view(measured)
     failures = []
     for name, spec in baseline["metrics"].items():
         base = float(spec["value"])
@@ -90,7 +167,7 @@ def main(argv: list[str] | None = None) -> int:
         baseline = json.load(fh)
 
     failures = check(measured, baseline, args.threshold)
-    metrics = measured.get("metrics", measured)
+    metrics = metrics_view(measured)
     for name, spec in baseline["metrics"].items():
         got = metrics.get(name)
         status = "MISS" if got is None else f"{float(got):.4g}"
