@@ -83,12 +83,16 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="also run a small traced VGG16 pipeline and "
                          "write its Perfetto trace JSON")
+    ap.add_argument("--autotune-out", default=None, metavar="PATH",
+                    help="also write the kernel-autotune winners "
+                         "accumulated by the kernel bench as a versioned "
+                         "CostTable artifact JSON")
     args = ap.parse_args()
 
     from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
                    fig13_throughput, table5_hetero, fig15_memory,
                    table67_optimal, fig_runtime_adapt, fig_exec_backend,
-                   fig_serving_mt)
+                   fig_serving_mt, fig_kernel_conv)
     benches = {
         "table4": lambda: table4_partition.run(),
         "fig5": lambda: fig5_redundancy.run(),
@@ -103,13 +107,15 @@ def main() -> None:
             frames=120 if args.fast else fig_runtime_adapt.FRAMES),
         "exec": lambda: fig_exec_backend.run(smoke=args.smoke or args.fast),
         "serving": lambda: fig_serving_mt.run(smoke=args.smoke or args.fast),
+        "kernel": lambda: fig_kernel_conv.run(smoke=args.smoke or args.fast),
     }
     if args.smoke:
-        # CI smoke: the exec-backend microbenchmark, the multi-tenant
-        # serving comparison, and the cheapest paper artifacts, all in
-        # tiny configs
+        # CI smoke: the exec-backend microbenchmark, the conv-kernel
+        # autotune microbenchmark, the multi-tenant serving comparison,
+        # and the cheapest paper artifacts, all in tiny configs
         smoke = {
             "exec": benches["exec"],
+            "kernel": benches["kernel"],
             "serving": benches["serving"],
             "table4": benches["table4"],
             "fig5": benches["fig5"],
@@ -154,6 +160,9 @@ def main() -> None:
     if args.trace_out:
         write_trace(args.trace_out)
         print(f"# wrote {args.trace_out}", file=sys.stderr)
+    if args.autotune_out:
+        fig_kernel_conv.export_autotune(args.autotune_out)
+        print(f"# wrote {args.autotune_out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -199,15 +199,24 @@ def plan_from_dict(d: Mapping) -> PicoPlan:
 # ---------------------------------------------------------------------------
 
 def cost_table_to_dict(t: CostTable) -> dict:
-    return {"ratios": [{"nodes": _nodes_out(k), "ratio": v}
-                       for k, v in sorted(t.ratios.items(),
-                                          key=lambda kv: sorted(kv[0]))],
-            "default": t.default}
+    d = {"ratios": [{"nodes": _nodes_out(k), "ratio": v}
+                    for k, v in sorted(t.ratios.items(),
+                                       key=lambda kv: sorted(kv[0]))],
+         "default": t.default}
+    # autotuned kernel winners: additive field (absent pre-autotune
+    # artifacts load fine; older loaders ignore it), so no schema bump
+    if getattr(t, "kernels", None):
+        d["kernels"] = [{"key": k, **t.kernels[k]}
+                        for k in sorted(t.kernels)]
+    return d
 
 
 def cost_table_from_dict(d: Mapping) -> CostTable:
+    kernels = {e["key"]: {k: v for k, v in e.items() if k != "key"}
+               for e in d.get("kernels", ())}
     return CostTable({_nodes_in(e["nodes"]): e["ratio"]
-                      for e in d["ratios"]}, default=d.get("default"))
+                      for e in d["ratios"]}, default=d.get("default"),
+                     kernels=kernels)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,16 @@ def compile(model, cluster: Cluster,
     # runs append to the same timeline
     tracer = Tracer()
     with obs_trace.scoped(tracer):
+        if exec_spec.autotune:
+            # tune kernel blocks first so calibration (and with it the
+            # planner's cost ratios) measures the tuned kernels; winners
+            # merge into the same CostTable artifact as the ratios
+            from ..exec.autotune import autotune_model
+            cost_table, _ = autotune_model(
+                model,
+                backend=exec_spec.backend
+                or getattr(model, "backend", None) or "pallas",
+                table=cost_table, iters=exec_spec.autotune_iters)
         pico = plan_with_spec(model.graph, cluster, model.input_size,
                               plan_spec, cost_table=cost_table)
         if exec_spec.calibrate:
@@ -65,7 +75,9 @@ def compile(model, cluster: Cluster,
             report = calibrate_plan(model, params, pico.pipeline.stages,
                                     backend=exec_spec.backend,
                                     iters=exec_spec.calibrate_iters)
+            tuned = cost_table.kernels if cost_table is not None else {}
             cost_table = report.table()
+            cost_table.kernels.update(tuned)  # ratios + tunings, one store
             pico = plan_with_spec(model.graph, cluster, model.input_size,
                                   plan_spec, partition=pico.partition,
                                   cost_table=cost_table)
@@ -103,6 +115,13 @@ class Deployment:
         # the executable-cache bound is process-global; a deployment
         # carrying one applies it the same way on compile and on load
         self.exec_spec.apply_cache_limit()
+        # autotuned kernel winners ride in the cost table; install them
+        # process-wide so a loaded artifact re-arms the fast path with
+        # zero re-tuning (same compile/load symmetry as the cache bound)
+        if self.cost_table is not None and \
+                getattr(self.cost_table, "kernels", None):
+            from ..exec.autotune import install
+            install(self.cost_table.kernels)
         if self.tracer is None:
             self.tracer = Tracer()
         if self.metrics is None:
@@ -147,6 +166,9 @@ class Deployment:
         if self.cost_table is not None:
             lines.append(f"  calibrated: {len(self.cost_table)} segment "
                          f"ratio(s)")
+            if self.cost_table.kernels:
+                lines.append(f"  autotuned: {len(self.cost_table.kernels)} "
+                             f"kernel shape(s)")
         return "\n".join(lines)
 
     # ---------------- execution ----------------

@@ -145,6 +145,11 @@ class ExecSpec(_SpecBase):
     :class:`~repro.core.cost.CostTable`.  ``profile`` wraps every stage
     invocation in a ``jax.profiler`` trace annotation so stages show up
     named in XLA profiles (opt-in; no-op when the profiler is absent).
+    ``fuse`` lowers conv->pool chains as one fused kernel call on
+    backends with a fused lowering (numerics-neutral on the others).
+    ``autotune`` makes :func:`repro.api.compile` search the Pallas
+    kernel's channel block sizes per conv shape before calibration and
+    persist the winners in the deployment's CostTable artifact.
     """
 
     backend: str | None = None
@@ -155,6 +160,9 @@ class ExecSpec(_SpecBase):
     calibrate: bool = False
     calibrate_iters: int = 3
     profile: bool = False       # jax.profiler bracket around each stage call
+    fuse: bool = True           # fuse conv->pool chains into one kernel call
+    autotune: bool = False      # tune kernel block sizes at compile time
+    autotune_iters: int = 3
 
     def __post_init__(self):
         if self.mode not in _EXEC_MODES:
@@ -166,6 +174,9 @@ class ExecSpec(_SpecBase):
         if self.calibrate_iters < 1:
             raise ValueError(f"calibrate_iters must be >= 1, "
                              f"got {self.calibrate_iters}")
+        if self.autotune_iters < 1:
+            raise ValueError(f"autotune_iters must be >= 1, "
+                             f"got {self.autotune_iters}")
 
     def apply_cache_limit(self) -> int | None:
         """Apply ``cache_size`` to the process-global executable cache

@@ -122,6 +122,10 @@ class CostTable:
 
     ratios: dict[frozenset[str], float] = field(default_factory=dict)
     default: float | None = None
+    # autotuned kernel winners keyed by ``exec.autotune.shape_key`` —
+    # {"block_ci", "block_co", "best_us", "backend"} per entry, so
+    # calibration ratios and kernel tunings share one versioned store
+    kernels: dict[str, dict] = field(default_factory=dict)
 
     def ratio(self, nodes) -> float:
         r = self.ratios.get(frozenset(nodes))

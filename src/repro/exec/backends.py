@@ -12,17 +12,25 @@ Registered backends:
 ``xla``
     ``lax.conv_general_dilated`` — the reference path on every platform.
 ``pallas``
-    The repro's implicit-GEMM Pallas kernel (``kernels.conv2d``).
+    The repro's implicit-GEMM Pallas kernel (``kernels.conv2d``), which
+    handles any stride >= 1 and any channel count (tails are padded up
+    to the channel block) and carries the conv epilogue — bias, relu,
+    optional non-overlapping max-pool — inside the kernel.
     ``interpret`` is auto-detected from the JAX platform: on TPU the
     kernel actually compiles; elsewhere it runs in interpret mode
-    (slow but bit-faithful).  Strided or kernel-unsupported shapes
-    route through :func:`kernels.conv2d.ops.conv2d`'s reference
-    fallback, which warns once per offending shape.
+    (slow but bit-faithful).  Channel block sizes come from
+    ``exec.autotune``'s installed winners when present.
+
+A backend may additionally register a *fused* lowering: the signature
+covers the whole conv epilogue (conv + bias + relu + optional pool) in
+one call, and ``exec.compiler.fusable_chains`` only rewrites segments
+for backends that have one — backends without it (xla) keep the exact
+composed-op sequence, preserving bit-equality with the eager oracle.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Protocol
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,12 +41,24 @@ from ..core.graph import LayerSpec
 # explicit pad_w/ph padding, no bias, no activation)
 ConvFn = Callable[[LayerSpec, dict, jax.Array, tuple[int, int]], jax.Array]
 
+# fused lowering: (conv_spec, pool_spec | None, params, x, pad_w, relu)
+# -> y, with bias + relu (+ pool) applied — one kernel call per chain
+FusedConvFn = Callable[
+    [LayerSpec, Optional[LayerSpec], dict, jax.Array, tuple[int, int], bool],
+    jax.Array]
+
 _REGISTRY: dict[str, ConvFn] = {}
+_FUSED: dict[str, FusedConvFn] = {}
 DEFAULT_BACKEND = "xla"
 
 
-def register_backend(name: str, fn: ConvFn) -> None:
+def register_backend(name: str, fn: ConvFn,
+                     fused: FusedConvFn | None = None) -> None:
     _REGISTRY[name] = fn
+    if fused is not None:
+        _FUSED[name] = fused
+    else:
+        _FUSED.pop(name, None)
 
 
 def available_backends() -> list[str]:
@@ -52,6 +72,11 @@ def get_backend(name: str | None) -> ConvFn:
     except KeyError:
         raise ValueError(f"unknown exec backend {name!r}; "
                          f"registered: {available_backends()}") from None
+
+
+def has_fused(name: str | None) -> bool:
+    """Does ``name`` register a fused conv-epilogue lowering?"""
+    return (name or DEFAULT_BACKEND) in _FUSED
 
 
 def default_interpret() -> bool:
@@ -74,22 +99,76 @@ def _conv_xla(spec: LayerSpec, p: dict, x: jax.Array,
     )
 
 
+def _tuned(xp: jax.Array, w: jax.Array, stride, relu: bool,
+           pool) -> tuple[int | None, int | None]:
+    from .autotune import tuned_blocks
+    return tuned_blocks(xp.shape, w.shape, stride, relu, pool,
+                        backend="pallas")
+
+
 def _conv_pallas(spec: LayerSpec, p: dict, x: jax.Array,
                  pad_w: tuple[int, int]) -> jax.Array:
     from ..kernels.conv2d.ops import conv2d as conv2d_kernel
     ph = spec.padding[1]
     xp = jnp.pad(x, ((0, 0), (ph, ph), pad_w, (0, 0)))
-    return conv2d_kernel(xp, p["w"], stride=(spec.stride[1], spec.stride[0]),
-                         interpret=default_interpret())
+    stride = (spec.stride[1], spec.stride[0])
+    bci, bco = _tuned(xp, p["w"], stride, False, None)
+    return conv2d_kernel(xp, p["w"], stride=stride, block_ci=bci,
+                         block_co=bco, interpret=default_interpret())
+
+
+def _conv_pallas_fused(spec: LayerSpec, pool_spec: LayerSpec | None, p: dict,
+                       x: jax.Array, pad_w: tuple[int, int],
+                       relu: bool) -> jax.Array:
+    from ..kernels.conv2d.ops import conv2d_fused
+    ph = spec.padding[1]
+    xp = jnp.pad(x, ((0, 0), (ph, ph), pad_w, (0, 0)))
+    stride = (spec.stride[1], spec.stride[0])
+    pool = None if pool_spec is None \
+        else (pool_spec.kernel[1], pool_spec.kernel[0])
+    bci, bco = _tuned(xp, p["w"], stride, relu, pool)
+    return conv2d_fused(xp, p["w"], p["b"], stride=stride, relu=relu,
+                        pool=pool, block_ci=bci, block_co=bco,
+                        interpret=default_interpret())
 
 
 register_backend("xla", _conv_xla)
-register_backend("pallas", _conv_pallas)
+register_backend("pallas", _conv_pallas, fused=_conv_pallas_fused)
 
 
 # ---------------------------------------------------------------------------
 # layer application (backend-dispatching successor of builder._apply)
 # ---------------------------------------------------------------------------
+
+def apply_conv(spec: LayerSpec, p, x: jax.Array, relu: bool,
+               pad_w: tuple[int, int] = (0, 0),
+               backend: str | None = None,
+               pool_spec: LayerSpec | None = None) -> jax.Array:
+    """Apply one conv epilogue chain (conv + bias + relu + optional
+    non-overlapping max-pool) to an NHWC tile.
+
+    Backends with a fused lowering execute the whole chain as one
+    kernel call; others compose the exact eager sequence, so a backend
+    without fusion stays bit-identical to the oracle.  ``pool_spec``
+    must describe a VALID kernel==stride pool (the only shape
+    ``fusable_chains`` emits).
+    """
+    name = backend or DEFAULT_BACKEND
+    fused = _FUSED.get(name)
+    if fused is not None:
+        return fused(spec, pool_spec, p, x, pad_w, relu)
+    y = get_backend(name)(spec, p, x, pad_w) + p["b"]
+    if relu:
+        y = jax.nn.relu(y)
+    if pool_spec is not None:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, pool_spec.kernel[1], pool_spec.kernel[0], 1),
+            window_strides=(1, pool_spec.stride[1], pool_spec.stride[0], 1),
+            padding="VALID",
+        )
+    return y
+
 
 def apply_layer(spec: LayerSpec, p, x: jax.Array, relu: bool,
                 pad_w: tuple[int, int] = (0, 0),
@@ -103,8 +182,7 @@ def apply_layer(spec: LayerSpec, p, x: jax.Array, relu: bool,
     """
     ph = spec.padding[1]
     if spec.kind == "conv":
-        y = get_backend(backend)(spec, p, x, pad_w) + p["b"]
-        return jax.nn.relu(y) if relu else y
+        return apply_conv(spec, p, x, relu, pad_w, backend)
     if spec.kind == "pool":
         return jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max,

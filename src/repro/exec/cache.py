@@ -96,23 +96,23 @@ def static_stage_key(model, nodes, plans, needs) -> tuple:
 
 
 def stage_cache_key(model, nodes, plans, needs, *, backend, relu, donate,
-                    boundary: Mapping, static_key: tuple | None = None
-                    ) -> tuple:
+                    boundary: Mapping, static_key: tuple | None = None,
+                    fuse: bool = True) -> tuple:
     shapes = tuple((k, tuple(boundary[k].shape), str(boundary[k].dtype))
                    for k in needs)
     if static_key is None:
         static_key = static_stage_key(model, nodes, plans, needs)
-    return (*static_key, backend, relu, bool(donate), shapes)
+    return (*static_key, backend, relu, bool(donate), bool(fuse), shapes)
 
 
 def compiled_stage(model, nodes, plans, needs: Sequence, sinks: Sequence,
                    *, backend: str | None, relu: bool, donate: bool,
-                   boundary: Mapping, static_key: tuple | None = None
-                   ) -> CompiledStage:
+                   boundary: Mapping, static_key: tuple | None = None,
+                   fuse: bool = True) -> CompiledStage:
     """Fetch-or-build the executable for one stage + boundary shapes."""
     key = stage_cache_key(model, nodes, plans, needs, backend=backend,
                           relu=relu, donate=donate, boundary=boundary,
-                          static_key=static_key)
+                          static_key=static_key, fuse=fuse)
     hit = _CACHE.get(key)
     tr = obs_trace.current()
     if hit is not None:
@@ -128,7 +128,7 @@ def compiled_stage(model, nodes, plans, needs: Sequence, sinks: Sequence,
                    hit=False)
     t0 = _time.perf_counter()
     cs = CompiledStage(model, nodes, plans, needs, sinks, backend=backend,
-                       relu=relu, donate=donate)
+                       relu=relu, donate=donate, fuse=fuse)
     build_s = _time.perf_counter() - t0
     default_registry().histogram("exec.compile.build_s").observe(build_s)
     if tr:

@@ -28,6 +28,47 @@ import jax
 
 from ..pipeline.halo import (TilePlan, plan_tiles, split_inputs,
                              stitch_outputs)
+from .backends import DEFAULT_BACKEND, has_fused
+
+
+def fusable_chains(graph, nodes) -> dict[str, str]:
+    """conv -> pool pairs in ``nodes`` lowerable as one fused kernel.
+
+    A pool is fusable into its producing conv when the chain is private
+    and the pool collapses onto the conv's output grid:
+
+    * the pool is VALID (no padding) and non-overlapping
+      (kernel == stride — e.g. the zoo's 2x2/s2 pools), which is the
+      shape the kernel epilogue implements as an in-register reshape;
+    * its only predecessor is an in-segment conv;
+    * that conv feeds nothing else — no other in-segment successor and
+      not a segment sink — so skipping its materialization is safe.
+
+    Together with ``Graph.required_ranges``'s width-range arithmetic
+    these conditions also pin the tile geometry: the conv tile is
+    exactly the pool's input and starts on the pool grid, which
+    ``run_segment`` re-checks per tile before fusing.
+    """
+    nodes = frozenset(nodes)
+    sinks = set(graph.sinks(nodes))
+    chains: dict[str, str] = {}
+    for n in nodes:
+        spec = graph.layers[n]
+        if spec.kind != "pool":
+            continue
+        if (tuple(spec.kernel) != tuple(spec.stride)
+                or tuple(spec.padding) != (0, 0)):
+            continue
+        ps = graph.preds[n]
+        if len(ps) != 1 or ps[0] not in nodes:
+            continue
+        conv = ps[0]
+        if graph.layers[conv].kind != "conv" or conv in sinks:
+            continue
+        if [s for s in graph.succs[conv] if s in nodes] != [n]:
+            continue
+        chains[conv] = n
+    return chains
 
 
 def segment_signature(graph, nodes, input_size) -> tuple:
@@ -52,7 +93,8 @@ class CompiledStage:
     def __init__(self, model, nodes, plans: Sequence[TilePlan],
                  needs: Sequence[tuple[str, str | None]],
                  sinks: Sequence[str], *, backend: str | None = None,
-                 relu: bool = True, donate: bool = False):
+                 relu: bool = True, donate: bool = False,
+                 fuse: bool = True):
         self.model = model
         self.nodes = frozenset(nodes)
         self.plans = list(plans)
@@ -60,6 +102,13 @@ class CompiledStage:
         self.sinks = list(sinks)
         self.backend = backend
         self.relu = relu
+        # conv->pool chains lowered as one fused kernel call; only for
+        # backends with a fused lowering (xla keeps the composed-op
+        # sequence and with it bit-equality vs the eager oracle)
+        self.fuse = bool(fuse)
+        name = backend or getattr(model, "backend", None) or DEFAULT_BACKEND
+        self.fusion = fusable_chains(model.graph, self.nodes) \
+            if self.fuse and has_fused(name) else {}
         # XLA on CPU cannot alias donated buffers; donation there only
         # produces warnings, so honor the flag on accelerators only
         self.donate = bool(donate) and jax.default_backend() != "cpu"
@@ -80,7 +129,8 @@ class CompiledStage:
             tiles_out.append(self.model.run_segment(
                 params, self.nodes, tin,
                 ranges=(tp.out_ranges, tp.in_ranges),
-                relu=self.relu, backend=self.backend))
+                relu=self.relu, backend=self.backend,
+                fusion=self.fusion))
         return stitch_outputs(self.plans, self.sinks, tiles_out)
 
     def _run_frames(self, params, *bufs):
@@ -101,16 +151,17 @@ class CompiledStage:
 
 def compile_stage(model, nodes, fractions: Sequence[float], *,
                   backend: str | None = None, relu: bool = True,
-                  donate: bool = False, spec=None) -> CompiledStage:
+                  donate: bool = False, fuse: bool = True,
+                  spec=None) -> CompiledStage:
     """Convenience: plan tiles for ``fractions`` and compile the stage.
     ``spec`` (:class:`~repro.api.specs.ExecSpec`) supersedes the
-    individual ``backend``/``donate`` knobs when given."""
+    individual ``backend``/``donate``/``fuse`` knobs when given."""
     if spec is not None:
-        backend, donate = spec.backend, spec.donate
+        backend, donate, fuse = spec.backend, spec.donate, spec.fuse
     nodes = frozenset(nodes)
     g = model.graph
     plans = plan_tiles(g, nodes, model.full_sizes, model.input_size,
                        list(fractions))
     return CompiledStage(model, nodes, plans, model.boundary_needs(nodes),
                          g.sinks(nodes), backend=backend, relu=relu,
-                         donate=donate)
+                         donate=donate, fuse=fuse)

@@ -6,10 +6,26 @@ MXU, with BlockSpec tiling over (batch, out-channel, in-channel) and an
 fp32 VMEM accumulator.  The in-channel grid axis is innermost so the
 accumulator lives across its iterations (sequential grid on TPU).
 
-Layout: NHWC x HWIO -> NHWC, stride 1, VALID (the executable zoo's tiled
-stages present exactly this: padding is materialized by the stage
-boundary).  Channel tiles are MXU-aligned (128) whenever the channel
-counts allow.
+Layout: NHWC x HWIO -> NHWC, VALID (the executable zoo's tiled stages
+present exactly this: padding is materialized by the stage boundary).
+
+Supported conv space:
+
+* any stride >= 1 per spatial axis — the shifted-matmul patch gather
+  strides its slices, so the GEMM shape shrinks with the output instead
+  of computing discarded rows;
+* any channel count — inputs/weights are zero-padded up to the channel
+  block in the wrapper (zeros contribute nothing to the accumulation and
+  the padded out-channel tail is sliced off), so the MXU block size never
+  degrades to a tiny divisor tile for channel tails;
+* a fused epilogue executed inside the accumulator emit: bias add, relu,
+  and an optional non-overlapping max-pool (kernel == stride, e.g. 2x2),
+  all in fp32 before the final cast, so a conv->bias->relu->pool chain is
+  one Pallas call with no VMEM round-trips between the ops.
+
+Channel block sizes (``block_ci``/``block_co``) are tunable —
+``repro.exec.autotune`` searches them per conv shape and persists the
+winners in the CostTable artifact.
 """
 
 from __future__ import annotations
@@ -22,8 +38,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _conv2d_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int,
-                   n_ci_blocks: int):
+def _conv2d_kernel(*refs, kh: int, kw: int, sh: int, sw: int, h_out: int,
+                   w_out: int, n_ci_blocks: int, relu: bool,
+                   pool: tuple[int, int] | None, has_bias: bool):
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+        b_ref = None
     ci = pl.program_id(3)
 
     @pl.when(ci == 0)
@@ -32,24 +54,37 @@ def _conv2d_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int,
 
     x = x_ref[0]          # (H_in, W_in, TCI)
     w = w_ref[...]        # (KH, KW, TCI, TCO)
-    H_out = o_ref.shape[1]
-    W_out = o_ref.shape[2]
     acc = acc_ref[...]
     for dh in range(kh):
         for dw in range(kw):
-            patch = x[dh:dh + H_out, dw:dw + W_out, :]       # (H,W,TCI)
-            lhs = patch.reshape(H_out * W_out, patch.shape[-1])
-            rhs = w[dh, dw]                                   # (TCI, TCO)
+            patch = x[dh:dh + (h_out - 1) * sh + 1:sh,
+                      dw:dw + (w_out - 1) * sw + 1:sw, :]   # (H,W,TCI)
+            lhs = patch.reshape(h_out * w_out, patch.shape[-1])
+            rhs = w[dh, dw]                                  # (TCI, TCO)
             acc += jnp.dot(lhs, rhs,
                            preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
     @pl.when(ci == n_ci_blocks - 1)
     def _emit():
-        o_ref[0] = acc.reshape(H_out, W_out, -1).astype(o_ref.dtype)
+        y = acc.reshape(h_out, w_out, -1)
+        if b_ref is not None:
+            y = y + b_ref[0]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        if pool is not None:
+            ph, pw = pool
+            hp, wp = h_out // ph, w_out // pw
+            y = y[:hp * ph, :wp * pw, :]
+            y = y.reshape(hp, ph, wp, pw, y.shape[-1]).max(axis=(1, 3))
+        o_ref[0] = y.astype(o_ref.dtype)
 
 
 def _pick_tile(c: int, pref: int = 128) -> int:
+    """Pre-padding tile heuristic: largest power-of-two *divisor* of the
+    channel count.  Kept as the legacy reference the microbench compares
+    tuned blocks against; the fast path no longer needs a divisor (the
+    wrapper pads channel tails up to the block)."""
     if c % pref == 0:
         return pref
     for t in (64, 32, 16, 8):
@@ -58,31 +93,87 @@ def _pick_tile(c: int, pref: int = 128) -> int:
     return c
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def conv2d(x: jax.Array, w: jax.Array, *, interpret: bool = False
-           ) -> jax.Array:
-    """x: (N, H, W, CI); w: (KH, KW, CI, CO).  Stride-1 VALID conv."""
-    N, H, W, CI = x.shape
-    KH, KW, _, CO = w.shape
-    HO, WO = H - KH + 1, W - KW + 1
-    tci = _pick_tile(CI)
-    tco = _pick_tile(CO)
-    n_ci = CI // tci
+def _pick_block(c: int, pref: int = 128) -> int:
+    """Default channel block: the MXU-aligned 128 when the axis reaches
+    it, else the axis rounded up to the next power of two >= 8 (a single
+    zero-padded block)."""
+    if c >= pref:
+        return pref
+    b = 8
+    while b < c:
+        b *= 2
+    return b
 
-    grid = (N, 1, CO // tco, n_ci)
-    kernel = functools.partial(_conv2d_kernel, kh=KH, kw=KW,
-                               n_ci_blocks=n_ci)
-    return pl.pallas_call(
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "relu", "pool", "block_ci", "block_co", "interpret"))
+def conv2d_fused(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                 stride: tuple[int, int] = (1, 1), relu: bool = False,
+                 pool: tuple[int, int] | None = None,
+                 block_ci: int | None = None, block_co: int | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """x: (N, H, W, CI); w: (KH, KW, CI, CO); b: (CO,) or None.
+
+    Strided VALID conv with the fused epilogue described in the module
+    docstring.  ``pool`` is the max-pool window (== its stride); the
+    pooled output is ``(H_out // ph, W_out // pw)`` — identical to a
+    VALID non-overlapping ``lax.reduce_window``.  ``block_ci`` /
+    ``block_co`` override the channel block sizes (autotune winners).
+    """
+    N, H, W, CI = x.shape
+    KH, KW, CI2, CO = w.shape
+    assert CI == CI2, (x.shape, w.shape)
+    sh, sw = stride
+    HO = (H - KH) // sh + 1
+    WO = (W - KW) // sw + 1
+    tci = block_ci or _pick_block(CI)
+    tco = block_co or _pick_block(CO)
+    ci_pad = -CI % tci
+    co_pad = -CO % tco
+    if ci_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, ci_pad)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, ci_pad), (0, 0)))
+    if co_pad:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, co_pad)))
+        if b is not None:
+            b = jnp.pad(b, (0, co_pad))
+    n_ci = (CI + ci_pad) // tci
+    n_co = (CO + co_pad) // tco
+    if pool is not None:
+        HP, WP = HO // pool[0], WO // pool[1]
+    else:
+        HP, WP = HO, WO
+
+    grid = (N, 1, n_co, n_ci)
+    kernel = functools.partial(
+        _conv2d_kernel, kh=KH, kw=KW, sh=sh, sw=sw, h_out=HO, w_out=WO,
+        n_ci_blocks=n_ci, relu=relu, pool=pool, has_bias=b is not None)
+    in_specs = [
+        pl.BlockSpec((1, H, W, tci), lambda n, h, co, ci: (n, 0, 0, ci)),
+        pl.BlockSpec((KH, KW, tci, tco), lambda n, h, co, ci: (0, 0, ci, co)),
+    ]
+    args = [x, w]
+    if b is not None:
+        in_specs.append(pl.BlockSpec((1, tco), lambda n, h, co, ci: (0, co)))
+        args.append(b.reshape(1, -1))
+    out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, H, W, tci), lambda n, h, co, ci: (n, 0, 0, ci)),
-            pl.BlockSpec((KH, KW, tci, tco),
-                         lambda n, h, co, ci: (0, 0, ci, co)),
-        ],
-        out_specs=pl.BlockSpec((1, HO, WO, tco),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, HP, WP, tco),
                                lambda n, h, co, ci: (n, 0, 0, co)),
-        out_shape=jax.ShapeDtypeStruct((N, HO, WO, CO), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((N, HP, WP, CO + co_pad), x.dtype),
         scratch_shapes=[pltpu.VMEM((HO * WO, tco), jnp.float32)],
         interpret=interpret,
-    )(x, w)
+    )(*args)
+    return out[..., :CO] if co_pad else out
+
+
+def conv2d(x: jax.Array, w: jax.Array, *,
+           stride: tuple[int, int] = (1, 1),
+           block_ci: int | None = None, block_co: int | None = None,
+           interpret: bool = False) -> jax.Array:
+    """Plain strided VALID conv (no epilogue) — thin alias over
+    :func:`conv2d_fused`."""
+    return conv2d_fused(x, w, None, stride=stride, block_ci=block_ci,
+                        block_co=block_co, interpret=interpret)

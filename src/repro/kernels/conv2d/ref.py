@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the conv2d kernel."""
 
 import jax
+import jax.numpy as jnp
 
 
 def conv2d_ref(x: jax.Array, w: jax.Array,
@@ -9,3 +10,23 @@ def conv2d_ref(x: jax.Array, w: jax.Array,
     return jax.lax.conv_general_dilated(
         x, w, window_strides=stride, padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv2d_fused_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                     *, stride: tuple[int, int] = (1, 1), relu: bool = False,
+                     pool: tuple[int, int] | None = None) -> jax.Array:
+    """Composed-ops oracle for the fused conv epilogue: VALID conv,
+    + bias, relu, then a VALID non-overlapping (kernel == stride)
+    max-pool — the eager sequence the fused kernel collapses."""
+    y = conv2d_ref(x, w, stride)
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jax.nn.relu(y)
+    if pool is not None:
+        ph, pw = pool
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max,
+            window_dimensions=(1, ph, pw, 1),
+            window_strides=(1, ph, pw, 1), padding="VALID")
+    return y

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.graph import Graph, LayerSpec
-from ...exec.backends import apply_layer
+from ...exec.backends import apply_conv, apply_layer
 
 
 @dataclass
@@ -96,6 +96,7 @@ class CNNDef:
                       Mapping[str, tuple[int, int]]] | None = None,
         relu: bool = True,
         backend: str | None = None,
+        fusion: Mapping[str, str] | None = None,
     ) -> dict[str, jax.Array]:
         """Execute the sub-DAG ``nodes`` on (halo-extended) width tiles.
 
@@ -110,9 +111,15 @@ class CNNDef:
         ``backend`` selects the conv lowering (``exec.backends``); None
         uses the model's own ``self.backend``.
 
+        ``fusion`` maps conv -> pool pairs (from
+        :func:`repro.exec.compiler.fusable_chains`) to lower as one
+        fused kernel call; a pair whose tile ranges do not line up on
+        the pool grid silently executes unfused instead.
+
         Returns {sink: tile covering ranges[0][sink] along W}.
         """
         backend = backend or self.backend
+        fusion = fusion or {}
         nodes = set(nodes)
         g = self.graph
         if ranges is None:
@@ -133,9 +140,20 @@ class CNNDef:
             lo = a - pa
             return x[:, :, lo: lo + (b - a), :]
 
+        def fused_ranges_ok(conv: str, pool: str) -> bool:
+            """The fused kernel pools the conv tile in place, so the
+            conv tile must start on the pool grid and cover exactly the
+            pool's input; anything else runs unfused."""
+            kw_p = g.layers[pool].kernel[0]
+            ca, cb = req_out[conv]
+            pa, pb = req_out[pool]
+            return (req_in[pool] == req_out[conv]
+                    and ca == pa * kw_p
+                    and (cb - ca) // kw_p == pb - pa)
+
         vals: dict[str, jax.Array] = {}
         for n in g.topo_order:
-            if n not in nodes:
+            if n not in nodes or n in vals:  # in vals: emitted by a fused conv
                 continue
             spec = g.layers[n]
             ps = g.preds[n]
@@ -153,6 +171,12 @@ class CNNDef:
             full_in_w = (self.full_sizes[ps[0]] if ps else self.input_size)[0]
             pad_w = g.tile_padding(n, req_out[n], full_in_w) \
                 if spec.kind in ("conv", "pool", "dwconv") else (0, 0)
+            if spec.kind == "conv" and n in fusion \
+                    and fused_ranges_ok(n, fusion[n]):
+                vals[fusion[n]] = apply_conv(
+                    spec, params.get(n), xs[0], relu, pad_w, backend=backend,
+                    pool_spec=g.layers[fusion[n]])
+                continue
             vals[n] = apply_layer(spec, params.get(n), xs[0], relu, pad_w,
                                   backend=backend)
         return {s: vals[s] for s in g.sinks(nodes)}

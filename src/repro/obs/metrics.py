@@ -255,6 +255,18 @@ class MetricsRegistry:
         self._metrics.clear()
         self._collectors.clear()
 
+    def drop(self, name: str, kind: str | None = None) -> int:
+        """Remove every instrument named ``name`` (all label sets;
+        optionally restricted to one kind: "c"/"g"/"h").  Returns the
+        number of cells removed.  Lets a subsystem scope its accounting
+        per run — e.g. ``kernels.conv2d.ops.reset_fallbacks`` — without
+        clearing unrelated instruments."""
+        keys = [k for k in self._metrics
+                if k[1] == name and (kind is None or k[0] == kind)]
+        for k in keys:
+            del self._metrics[k]
+        return len(keys)
+
     # ------------------------------------------------------------ views
 
     def counters(self) -> list[Counter]:

@@ -34,6 +34,9 @@ class StageExecutor:
     donate: bool = False             # donate boundary buffers to XLA — only
     #                                  safe when the caller won't reuse them
     profile: bool = False            # jax.profiler annotation per call
+    fuse: bool = True                # lower conv->pool chains as one fused
+    #                                  kernel call (compiled mode, backends
+    #                                  with a fused lowering only)
 
     def __post_init__(self):
         g = self.model.graph
@@ -103,7 +106,8 @@ class StageExecutor:
         return compiled_stage(self.model, self.nodes, self.plans,
                               self.needs, self.sinks, backend=self.backend,
                               relu=True, donate=self.donate,
-                              boundary=boundary, static_key=self._static_key)
+                              boundary=boundary, static_key=self._static_key,
+                              fuse=self.fuse)
 
     def _run_eager(self, params, boundary) -> dict[str, jax.Array]:
         """The seed path: eager Python loop over device tiles."""
@@ -131,10 +135,12 @@ def executors_from_plan(model: "CNNDef", stages: Sequence[StagePlan],  # noqa: F
     let XLA clobber buffers a later stage still reads (single-stage
     callers opt in via the explicit ``donate=`` argument)."""
     profile = False
+    fuse = True
     if spec is not None:
         backend, mode = spec.backend, spec.mode
         profile = getattr(spec, "profile", False)
+        fuse = getattr(spec, "fuse", True)
     return [StageExecutor(model, st.nodes, list(st.fractions),
                           name=f"stage{si}", backend=backend, mode=mode,
-                          donate=donate, profile=profile)
+                          donate=donate, profile=profile, fuse=fuse)
             for si, st in enumerate(stages)]

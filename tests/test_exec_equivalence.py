@@ -71,6 +71,70 @@ def test_compiled_stage_bit_exact_with_eager(name, backend):
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("name", sorted(ZOO_TINY))
+def test_zoo_pallas_runs_without_fallbacks(name):
+    """The generalized Pallas kernel is the *only* conv path: every zoo
+    model — strided stems, 1x1 projections, channel tails, fused
+    conv->pool chains — runs the pallas backend with ZERO recorded
+    ``conv.fallback``s, matching the XLA reference to ULP tolerance
+    (interpret mode on CPU)."""
+    from repro.kernels.conv2d.ops import fallback_count, reset_fallbacks
+    m = zoo.build(name, **ZOO_TINY[name])
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, m.input_size[1], m.input_size[0], 3))
+    reset_fallbacks()
+    ref = m.forward(params, x, backend="xla")
+    out = m.forward(params, x, backend="pallas")          # monolithic
+    tiled = StageExecutor(m, frozenset(m.graph.layers), [0.6, 0.4],
+                          backend="pallas")(params, {}, x)  # fused+tiled
+    assert fallback_count() == 0, \
+        f"{name}: pallas backend fell back {fallback_count()} time(s)"
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(tiled[k]), np.asarray(ref[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_fused_conv_pool_chain_matches_unfused():
+    """fusable_chains finds the zoo's conv->pool chains and the fused
+    lowering matches the unfused compiled path to ULP tolerance."""
+    from repro.exec.compiler import fusable_chains
+    m = zoo.build("vgg16", **ZOO_TINY["vgg16"])
+    chains = fusable_chains(m.graph, frozenset(m.graph.layers))
+    assert len(chains) >= 4   # vgg16: one fusable pool per conv block
+    for conv, pool in chains.items():
+        assert m.graph.layers[conv].kind == "conv"
+        assert m.graph.layers[pool].kind == "pool"
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 40, 40, 3))
+    fused = StageExecutor(m, frozenset(m.graph.layers), [0.5, 0.5],
+                          backend="pallas")(params, {}, x)
+    unfused = StageExecutor(m, frozenset(m.graph.layers), [0.5, 0.5],
+                            backend="pallas", fuse=False)(params, {}, x)
+    for k in fused:
+        np.testing.assert_allclose(np.asarray(fused[k]),
+                                   np.asarray(unfused[k]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fuse_flag_is_part_of_cache_key():
+    """Fused and unfused executables of the same stage must not collide
+    in the executable cache."""
+    from repro.exec import clear_cache, cache_stats
+    m = zoo.build("vgg16", **ZOO_TINY["vgg16"])
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 40, 40, 3))
+    clear_cache()
+    StageExecutor(m, frozenset(m.graph.layers), [1.0],
+                  backend="pallas")(params, {}, x)
+    StageExecutor(m, frozenset(m.graph.layers), [1.0],
+                  backend="pallas", fuse=False)(params, {}, x)
+    assert cache_stats().misses == 2   # distinct keys -> two builds
+    clear_cache()
+
+
 def test_compiled_multi_stage_plan_bit_exact_with_eager():
     """Whole-plan check: compiled and eager runners agree stage by stage
     on a real PICO plan (not just the single fused stage)."""

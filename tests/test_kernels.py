@@ -6,8 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.conv2d.ops import conv2d
-from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.conv2d.ops import (conv2d, conv2d_fused, fallback_count,
+                                      reset_fallbacks)
+from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref
 from repro.kernels.attention.ops import decode_attention
 from repro.kernels.attention.ref import decode_attention_ref
 from repro.kernels.ssd.ops import ssd_chunk
@@ -36,6 +37,96 @@ def test_conv2d_sweep(shape, dtype):
     ref = conv2d_ref(x, wt)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("stride", [(2, 2), (3, 2), 2])
+@pytest.mark.parametrize("shape", [
+    (1, 9, 9, 8, 16, 3, 3),
+    (2, 12, 11, 16, 8, 3, 3),
+    (1, 15, 15, 3, 10, 7, 7),    # zoo-style 7x7 stem
+    (1, 14, 14, 13, 11, 1, 1),   # 1x1 projection, channel tails
+])
+def test_conv2d_strided_sweep(shape, stride):
+    """Strided convs run the Pallas kernel directly — no fallback."""
+    n, h, w, ci, co, kh, kw = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, ci), jnp.float32)
+    wt = jax.random.normal(jax.random.PRNGKey(1), (kh, kw, ci, co),
+                           jnp.float32) / np.sqrt(kh * kw * ci)
+    reset_fallbacks()
+    out = conv2d(x, wt, stride=stride, interpret=True)
+    st = (stride, stride) if isinstance(stride, int) else stride
+    ref = conv2d_ref(x, wt, st)
+    assert fallback_count() == 0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("blocks", [(8, 8), (16, 32), (128, 128)])
+@pytest.mark.parametrize("shape", [
+    (1, 8, 8, 5, 7, 3, 3),       # tails on both axes
+    (2, 10, 10, 13, 26, 3, 3),
+    (1, 9, 9, 130, 3, 1, 1),     # tail past one 128 block
+])
+def test_conv2d_channel_tail_blocks(shape, blocks):
+    """Non-MXU-aligned channel counts run under any block size: the
+    wrapper zero-pads the tail block instead of degrading the tile."""
+    n, h, w, ci, co, kh, kw = shape
+    bci, bco = blocks
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, ci), jnp.float32)
+    wt = jax.random.normal(jax.random.PRNGKey(1), (kh, kw, ci, co),
+                           jnp.float32) / np.sqrt(kh * kw * ci)
+    out = conv2d(x, wt, block_ci=bci, block_co=bco, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(conv2d_ref(x, wt)),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("pool", [None, (2, 2)])
+@pytest.mark.parametrize("shape", [
+    (1, 12, 12, 6, 6, 3, 3, (1, 1)),
+    (1, 13, 13, 5, 7, 3, 3, (1, 1)),    # odd conv output + pool floor
+    (2, 17, 15, 8, 8, 3, 3, (2, 2)),    # strided conv + pool
+])
+def test_conv2d_fused_epilogue(shape, relu, pool):
+    """Fused bias+relu(+pool) inside the kernel == composed oracle."""
+    n, h, w, ci, co, kh, kw, stride = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, ci), jnp.float32)
+    wt = jax.random.normal(jax.random.PRNGKey(1), (kh, kw, ci, co),
+                           jnp.float32) / np.sqrt(kh * kw * ci)
+    b = jax.random.normal(jax.random.PRNGKey(2), (co,), jnp.float32)
+    out = conv2d_fused(x, wt, b, stride=stride, relu=relu, pool=pool,
+                       interpret=True)
+    ref = conv2d_fused_ref(x, wt, b, stride=stride, relu=relu, pool=pool)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **TOL[jnp.float32])
+
+
+def test_conv2d_stride_normalization_and_validation():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 8, 4))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 4)) * 0.1
+    np.testing.assert_array_equal(
+        np.asarray(conv2d(x, wt, stride=2, interpret=True)),
+        np.asarray(conv2d(x, wt, stride=(2, 2), interpret=True)))
+    with pytest.raises(ValueError, match="stride"):
+        conv2d(x, wt, stride=0, interpret=True)
+
+
+def test_reset_fallbacks_scopes_accounting_per_run():
+    """reset_fallbacks() zeroes the counter AND the warn-once set, so a
+    scoped run both counts from zero and re-warns."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 2, 4))
+    wt = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 4))  # H < KH
+    reset_fallbacks()
+    with pytest.warns(RuntimeWarning):
+        conv2d(x, wt, interpret=True)
+    assert fallback_count() == 1
+    reset_fallbacks()
+    assert fallback_count() == 0
+    with pytest.warns(RuntimeWarning):   # warn-once set was cleared too
+        conv2d(x, wt, interpret=True)
+    assert fallback_count() == 1
+    reset_fallbacks()
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

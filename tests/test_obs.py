@@ -200,22 +200,24 @@ def test_conv_fallback_is_structured():
     from repro.kernels.conv2d.ops import conv2d, fallback_count
     from repro.obs.metrics import default_registry
 
-    x = jnp.ones((1, 8, 8, 4), jnp.float32)
+    # strided convs now run on the Pallas kernel; the one remaining
+    # fallback is an input spatially smaller than the filter
+    x = jnp.ones((1, 2, 2, 4), jnp.float32)
     w = jnp.ones((3, 3, 4, 8), jnp.float32)
     before = fallback_count()
     tr = Tracer()
     with obs_trace.scoped(tr), pytest.warns(RuntimeWarning):
         import warnings
         warnings.simplefilter("always")           # defeat the once-cache
-        conv2d(x, w, stride=(2, 2))
+        conv2d(x, w, stride=(1, 1))
     assert fallback_count() == before + 1
     flat = flatten(default_registry().snapshot())
     labelled = [k for k in flat
-                if k.startswith("conv.fallback{") and "reason=stride" in k
-                and "stride=(2, 2)" in k]
+                if k.startswith("conv.fallback{") and "reason=shape" in k
+                and "x_shape=(1, 2, 2, 4)" in k]
     assert labelled, sorted(k for k in flat if k.startswith("conv.fallback"))
     assert [s.name for s in tr.spans] == ["conv.fallback"]
-    assert tr.spans[0].attr("reason") == "stride"
+    assert tr.spans[0].attr("reason") == "shape"
 
 
 # ------------------------------------- end-to-end: fig13 VGG16 deployment
