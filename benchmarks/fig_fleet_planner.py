@@ -1,0 +1,151 @@
+"""Fleet planner-throughput benchmark: incremental PipelineDP + registry.
+
+Two phases, both on the paper's 8-device heterogeneous Pi cluster:
+
+**Churn replans.**  A device drops out (every device takes a turn,
+``rounds`` times over).  The *scratch* lane re-runs Algorithm 2 cold
+for each event; the *incremental* lane re-plans through one shared
+:class:`~repro.core.pipeline_dp.PlannerCache` — segment geometry is
+chain-keyed, so only the device-dependent DP re-runs.  The acceptance
+bar is **>= 10x** replans/sec, and every incremental plan must be
+**bit-identical** to its from-scratch twin (period, latency, stage
+assignment, fractions — exact float equality, no tolerance).
+
+**Registry admissions.**  ``cells`` identically-shaped clusters (fresh
+device names each) admit the same model through one
+:class:`~repro.fleet.registry.PlanRegistry`: the first is a miss, the
+rest are hits with the plan's devices rebound onto each cell — a
+deterministic hit rate of ``(cells - 1) / cells``.
+
+Rows::
+
+    fleet_planner.scratch        us per replan, rate=<replans/s>
+    fleet_planner.incremental    us per replan, rate=<...>;speedup=<x>  (gated)
+    fleet_planner.bit_identical  compare us, <1.0|0.0>                  (gated)
+    fleet_planner.registry       us per admission, hit_rate=<r>;...     (gated)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .common import Timer, csv_row, make_pi_cluster
+from repro.api.specs import PlanSpec
+from repro.core import Cluster
+from repro.core.pipeline_dp import PlannerCache
+from repro.core.planner import PicoPlan, plan_with_spec
+from repro.fleet import PlanRegistry
+from repro.models.cnn import zoo
+
+CAPS = [1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8]   # 8-device hetero Pis
+
+SMOKE = dict(size=(96, 96), scale=0.5, rounds=1, cells=8)
+FULL = dict(size=(224, 224), scale=1.0, rounds=3, cells=32)
+
+
+def _churn_clusters(base: Cluster) -> list[Cluster]:
+    """One cluster per churn event: each device takes a turn leaving."""
+    out = []
+    for d in base.devices:
+        out.append(base.restricted(
+            [x for x in base.devices if x.name != d.name]))
+    return out
+
+
+def _plan_sig(p: PicoPlan) -> tuple:
+    """Exact (bitwise) plan identity: costs, assignment, fractions."""
+    return (p.period, p.latency, p.pipeline.feasible,
+            tuple((st.first_piece, st.last_piece,
+                   tuple(d.name for d in st.devices),
+                   tuple(st.fractions), st.cost.total, st.cost.t_comp,
+                   st.cost.t_comm) for st in p.pipeline.stages))
+
+
+def run(smoke: bool = False) -> list[str]:
+    rows = []
+    cfg = SMOKE if smoke else FULL
+    model = zoo.vgg16(input_size=cfg["size"], scale=cfg["scale"])
+    base = make_pi_cluster(CAPS)
+    spec = PlanSpec()
+    events = _churn_clusters(base) * cfg["rounds"]
+
+    # ---- scratch lane: cold Algorithm 2 per churn event --------------
+    seed = plan_with_spec(model.graph, base, model.input_size, spec)
+    scratch_plans = []
+    with Timer() as t_scr:
+        for c in events:
+            scratch_plans.append(plan_with_spec(
+                model.graph, c, model.input_size, spec,
+                partition=seed.partition))
+    scr_us = 1e6 * t_scr.s / len(events)
+
+    # ---- incremental lane: shared PlannerCache, same events ----------
+    cache = PlannerCache()
+    warm = plan_with_spec(model.graph, base, model.input_size, spec,
+                          planner_cache=cache)
+    inc_plans = []
+    with Timer() as t_inc:
+        for c in events:
+            inc_plans.append(plan_with_spec(
+                model.graph, c, model.input_size, spec,
+                partition=warm.partition, planner_cache=cache))
+    inc_us = 1e6 * t_inc.s / len(events)
+    speedup = t_scr.s / t_inc.s if t_inc.s > 0 else 0.0
+
+    rows.append(csv_row("fleet_planner.scratch", scr_us,
+                        f"rate={1e6 / scr_us:.2f}"))
+    rows.append(csv_row("fleet_planner.incremental", inc_us,
+                        f"rate={1e6 / inc_us:.2f};speedup={speedup:.2f}"))
+
+    # ---- bit-identity: incremental plans == scratch twins ------------
+    assert all(p.source == "incremental" for p in inc_plans)
+    with Timer() as t_cmp:
+        mismatches = sum(_plan_sig(a) != _plan_sig(b)
+                         for a, b in zip(scratch_plans, inc_plans))
+    rows.append(csv_row("fleet_planner.bit_identical", 1e6 * t_cmp.s,
+                        f"{1.0 if mismatches == 0 else 0.0}"))
+
+    # ---- registry: identical cells, fresh names, one shared cache ----
+    reg = PlanRegistry(capacity=max(4, cfg["cells"]))
+    cells = [Cluster([dataclasses.replace(d, name=f"cell{k}.{d.name}")
+                      for d in base.devices], bandwidth=base.bandwidth)
+             for k in range(cfg["cells"])]
+    with Timer() as t_reg:
+        admitted = [reg.get_or_plan(model, c, spec) for c in cells]
+    reg_us = 1e6 * t_reg.s / len(cells)
+    n_hits = sum(p.source == "registry" for p in admitted)
+    rows.append(csv_row(
+        "fleet_planner.registry", reg_us,
+        f"hit_rate={reg.hit_rate:.4f};hits={n_hits};misses={reg.misses}"))
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Standalone entry point for CI's planner-bench lane:
+    ``python -m benchmarks.fig_fleet_planner --smoke --out X.json``
+    writes the same rows/metrics JSON shape as ``benchmarks.run`` so
+    ``tools/bench_gate.py`` can gate it."""
+    import argparse
+    import json
+    import time
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    from .run import parse_metrics
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    rows = run(smoke=args.smoke)
+    wall = time.time() - t0
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump({"rows": rows, "metrics": parse_metrics(rows),
+                       "wall_s": wall,
+                       "mode": "smoke" if args.smoke else "full"},
+                      fh, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,11 +22,16 @@ _LAZY = {
     "PlanSpec": ("repro.api.specs", "PlanSpec"),
     "ExecSpec": ("repro.api.specs", "ExecSpec"),
     "DeploySpec": ("repro.api.specs", "DeploySpec"),
+    "FleetSpec": ("repro.api.specs", "FleetSpec"),
+    "PlanRegistry": ("repro.fleet.registry", "PlanRegistry"),
+    "FleetRouter": ("repro.fleet.router", "FleetRouter"),
     "api": ("repro.api", None),
     "obs": ("repro.obs", None),
+    "fleet": ("repro.fleet", None),
 }
 
 __all__ = ["compile", "Deployment", "PlanSpec", "ExecSpec", "DeploySpec",
-           "api", "obs"]
+           "FleetSpec", "PlanRegistry", "FleetRouter", "api", "obs",
+           "fleet"]
 
 __getattr__, __dir__ = lazy_exports(__name__, globals(), _LAZY)

@@ -9,8 +9,8 @@ free of import cycles.
 """
 
 from ._compat import lazy_exports, reset_legacy_warnings
-from .specs import (SPEC_VERSION, DeploySpec, ExecSpec, PlanSpec,
-                    spec_from_dict)
+from .specs import (SPEC_VERSION, DeploySpec, ExecSpec, FleetSpec,
+                    PlanSpec, spec_from_dict)
 
 _LAZY = {
     "compile": ("repro.api.deployment", "compile"),
@@ -19,7 +19,8 @@ _LAZY = {
     "SCHEMA_VERSION": ("repro.api.artifacts", "SCHEMA_VERSION"),
 }
 
-__all__ = ["PlanSpec", "ExecSpec", "DeploySpec", "spec_from_dict",
+__all__ = ["PlanSpec", "ExecSpec", "DeploySpec", "FleetSpec",
+           "spec_from_dict",
            "SPEC_VERSION", "SCHEMA_VERSION", "compile", "Deployment",
            "artifacts", "reset_legacy_warnings"]
 

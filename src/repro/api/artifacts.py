@@ -185,13 +185,17 @@ def pipeline_from_dict(d: Mapping) -> PipelinePlan:
 
 
 def plan_to_dict(pico: PicoPlan) -> dict:
+    # "source" (scratch | incremental | registry) is an additive field:
+    # pre-provenance artifacts load as "scratch", old loaders ignore it
     return {"partition": partition_to_dict(pico.partition),
-            "pipeline": pipeline_to_dict(pico.pipeline)}
+            "pipeline": pipeline_to_dict(pico.pipeline),
+            "source": pico.source}
 
 
 def plan_from_dict(d: Mapping) -> PicoPlan:
     return PicoPlan(partition_from_dict(d["partition"]),
-                    pipeline_from_dict(d["pipeline"]))
+                    pipeline_from_dict(d["pipeline"]),
+                    source=d.get("source", "scratch"))
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +278,22 @@ def model_from_dict(d: Mapping):
 
 
 # ---------------------------------------------------------------------------
+# fleet plan registry
+# ---------------------------------------------------------------------------
+
+def plan_registry_to_dict(reg) -> dict:
+    """Serialize a :class:`~repro.fleet.registry.PlanRegistry` (entries
+    in LRU order, oldest first; the payload shape is owned by the
+    registry so its key scheme and this codec evolve together)."""
+    return reg.to_payload()
+
+
+def plan_registry_from_dict(d: Mapping):
+    from ..fleet.registry import PlanRegistry   # lazy: avoid import cycle
+    return PlanRegistry.from_payload(d)
+
+
+# ---------------------------------------------------------------------------
 # public JSON entry points
 # ---------------------------------------------------------------------------
 
@@ -283,6 +303,7 @@ _CODECS = {
     "cost_table": (cost_table_to_dict, cost_table_from_dict),
     "cluster": (cluster_to_dict, cluster_from_dict),
     "model": (model_to_dict, model_from_dict),
+    "plan_registry": (plan_registry_to_dict, plan_registry_from_dict),
 }
 
 

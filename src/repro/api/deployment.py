@@ -66,8 +66,14 @@ def compile(model, cluster: Cluster,
                 backend=exec_spec.backend
                 or getattr(model, "backend", None) or "pallas",
                 table=cost_table, iters=exec_spec.autotune_iters)
+        # one PlannerCache for the deployment's lifetime: the post-
+        # calibration re-plan and any later .replan() hops reuse the
+        # initial plan's segment geometry (incremental hot path)
+        from ..core.pipeline_dp import PlannerCache
+        cache = PlannerCache()
         pico = plan_with_spec(model.graph, cluster, model.input_size,
-                              plan_spec, cost_table=cost_table)
+                              plan_spec, cost_table=cost_table,
+                              planner_cache=cache)
         if exec_spec.calibrate:
             from ..exec.calibrate import calibrate_plan
             if params is None:
@@ -80,9 +86,12 @@ def compile(model, cluster: Cluster,
             cost_table.kernels.update(tuned)  # ratios + tunings, one store
             pico = plan_with_spec(model.graph, cluster, model.input_size,
                                   plan_spec, partition=pico.partition,
-                                  cost_table=cost_table)
-    return Deployment(model, cluster, plan_spec, exec_spec, pico,
-                      cost_table=cost_table, params=params, tracer=tracer)
+                                  cost_table=cost_table,
+                                  planner_cache=cache)
+    dep = Deployment(model, cluster, plan_spec, exec_spec, pico,
+                     cost_table=cost_table, params=params, tracer=tracer)
+    dep._planner_cache = cache
+    return dep
 
 
 def _init_params(model, key=None):
@@ -312,14 +321,25 @@ class Deployment:
     def replan(self, cluster: Cluster) -> "Deployment":
         """Re-plan onto a changed cluster, reusing Algorithm 1's piece
         chain and any measured cost table (the runtime feedback loop as
-        a pure function: old deployment + new cluster -> new one)."""
+        a pure function: old deployment + new cluster -> new one).
+
+        A :class:`~repro.core.pipeline_dp.PlannerCache` is carried
+        across the replan chain, so every hop after the first is the
+        incremental hot path (``pico.source == "incremental"``)."""
+        from ..core.pipeline_dp import PlannerCache
+        cache = getattr(self, "_planner_cache", None)
+        if cache is None:
+            cache = self._planner_cache = PlannerCache()
         pico = plan_with_spec(self.model.graph, cluster,
                               self.model.input_size, self.plan_spec,
                               partition=self.pico.partition,
-                              cost_table=self.cost_table)
-        return Deployment(self.model, cluster, self.plan_spec,
-                          self.exec_spec, pico, cost_table=self.cost_table,
-                          params=self.params)
+                              cost_table=self.cost_table,
+                              planner_cache=cache)
+        dep = Deployment(self.model, cluster, self.plan_spec,
+                         self.exec_spec, pico, cost_table=self.cost_table,
+                         params=self.params)
+        dep._planner_cache = cache
+        return dep
 
     # ---------------- persistence ----------------
 

@@ -254,7 +254,58 @@ class DeploySpec(_SpecBase):
             metrics=self.metrics)
 
 
-SPEC_KINDS = {cls.__name__: cls for cls in (PlanSpec, ExecSpec, DeploySpec)}
+_ROUTE_POLICIES = ("least_loaded", "round_robin")
+
+
+@dataclass(frozen=True)
+class FleetSpec(_SpecBase):
+    """Fleet-tier configuration (:mod:`repro.fleet`).
+
+    ``registry_capacity`` bounds the LRU plan registry (entries =
+    distinct (model, cluster signature, PlanSpec, CostTable) keys).
+    ``routing`` picks the admission policy: ``least_loaded`` sends a new
+    tenant to the cell with the lowest load-EWMA per unit capacity;
+    ``round_robin`` ignores load.  ``ewma_beta`` is the cell-load
+    smoothing factor (same convention as
+    :attr:`DeploySpec.ewma_beta`).  ``scale_up_load`` /
+    ``scale_down_load`` are the autoscaler watermarks on smoothed cell
+    load, and ``min_clusters`` / ``max_clusters`` bound how far the
+    hooks may grow or shrink the fleet.
+    """
+
+    registry_capacity: int = 256
+    routing: str = "least_loaded"
+    ewma_beta: float = 0.3
+    scale_up_load: float = 0.8
+    scale_down_load: float = 0.25
+    min_clusters: int = 1
+    max_clusters: int | None = None
+
+    def __post_init__(self):
+        if self.registry_capacity < 1:
+            raise ValueError(f"registry_capacity must be >= 1, "
+                             f"got {self.registry_capacity}")
+        if self.routing not in _ROUTE_POLICIES:
+            raise ValueError(f"routing must be one of {_ROUTE_POLICIES}, "
+                             f"got {self.routing!r}")
+        if not 0 < self.ewma_beta <= 1:
+            raise ValueError(f"ewma_beta must be in (0, 1], "
+                             f"got {self.ewma_beta}")
+        if not 0 <= self.scale_down_load < self.scale_up_load:
+            raise ValueError(
+                f"need 0 <= scale_down_load < scale_up_load, got "
+                f"{self.scale_down_load} / {self.scale_up_load}")
+        if self.min_clusters < 1:
+            raise ValueError(f"min_clusters must be >= 1, "
+                             f"got {self.min_clusters}")
+        if (self.max_clusters is not None
+                and self.max_clusters < self.min_clusters):
+            raise ValueError(f"max_clusters must be None or >= min_clusters, "
+                             f"got {self.max_clusters}")
+
+
+SPEC_KINDS = {cls.__name__: cls
+              for cls in (PlanSpec, ExecSpec, DeploySpec, FleetSpec)}
 
 
 def spec_from_dict(d: dict):

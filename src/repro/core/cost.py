@@ -297,6 +297,30 @@ class StageCost:
         return self.t_comp + self.t_comm
 
 
+def stage_cost_from_segment(
+    seg: SegmentCost,
+    devices: Sequence[Device],
+    cluster: Cluster,
+    ratio: float = 1.0,
+) -> StageCost:
+    """Price a (possibly cached) :class:`SegmentCost` on ``devices``.
+
+    This is the exact arithmetic tail of :func:`stage_cost` — the
+    geometry (:func:`segment_cost`) is the expensive, device-independent
+    part, so the incremental planner caches :class:`SegmentCost` objects
+    across re-plans and re-prices them here.  Both paths share these
+    lines, which is what makes cached and from-scratch stage costs
+    bit-identical.
+    """
+    comp = [d.t_comp(f) * ratio for d, f in zip(devices, seg.per_device_flops)]
+    t_comp = max(comp)
+    # d_f = the first device distributes/gathers (Eq. 9-10)
+    d_f = devices[0]
+    t_comm = sum((seg.in_bytes[k] + seg.out_bytes[k]) / cluster.b(d_f, devices[k])
+                 for k in range(1, len(devices)))
+    return StageCost(t_comp, t_comm, comp, seg)
+
+
 def stage_cost(
     g: Graph,
     nodes: frozenset[str] | set[str],
@@ -320,10 +344,4 @@ def stage_cost(
         fractions = [d.capacity / total for d in devices]
     seg = segment_cost(g, nodes, full_sizes, input_size, fractions)
     ratio = cost_table.ratio(nodes) if cost_table is not None else 1.0
-    comp = [d.t_comp(f) * ratio for d, f in zip(devices, seg.per_device_flops)]
-    t_comp = max(comp)
-    # d_f = the first device distributes/gathers (Eq. 9-10)
-    d_f = devices[0]
-    t_comm = sum((seg.in_bytes[k] + seg.out_bytes[k]) / cluster.b(d_f, devices[k])
-                 for k in range(1, len(devices)))
-    return StageCost(t_comp, t_comm, comp, seg)
+    return stage_cost_from_segment(seg, devices, cluster, ratio)

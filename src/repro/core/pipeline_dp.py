@@ -9,17 +9,32 @@ replicated over m devices:
 
 Latency (sum of stage times) is tracked alongside and solutions whose
 latency exceeds ``T_lim`` are pruned, matching the paper's pseudocode.
+
+Two solvers share the class: the scalar top-down reference (`solve`)
+and an incremental hot path used when a :class:`PlannerCache` is
+attached.  Planning cost is dominated by segment *geometry*
+(:func:`~repro.core.cost.segment_cost` graph walks per ``(i, j, m)``
+state), which is device-independent — the cache persists it across
+re-plans, so single-device churn only redoes cheap device-time
+arithmetic, and a solved DP table is reused outright when the
+homogenized cluster signature is unchanged.  Candidate stage costs
+are evaluated batch-vectorized with numpy over all split ranges; the
+elementwise operation order mirrors the scalar path exactly, so
+incremental plans are bit-identical to from-scratch plans (pinned in
+tests).
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import lru_cache
-from typing import Mapping, Sequence
+from typing import Sequence
+
+import numpy as np
 
 from .graph import Graph
-from .cost import Cluster, CostTable, Device, StageCost, stage_cost
+from .cost import (Cluster, CostTable, Device, StageCost, segment_cost,
+                   stage_cost_from_segment)
 from .partition import Piece
 
 
@@ -57,8 +72,85 @@ class PipelinePlan:
         return iter(self.stages)
 
 
+class PlannerCache:
+    """Persistent planner state for one (graph, piece chain, input size).
+
+    Owned by whoever re-plans repeatedly — a fleet registry entry, a
+    serving tenant, a runtime's churn loop — and threaded into
+    :class:`PipelineDP` (via ``plan_with_spec(planner_cache=)``).
+    Three reuse tiers, cheapest first:
+
+    * ``solutions`` — fully solved DP tables keyed by the homogenized
+      cluster signature ``(L, D, capacity, alpha, bandwidth, t_lim,
+      cost-table content)``; an exact signature match skips straight to
+      plan reconstruction (zero ``solve(i, j, p)`` work);
+    * ``segments`` — device-independent :class:`SegmentCost` geometry
+      per ``(i, j, m)`` state (the graph walks that dominate planning);
+      always valid across device churn, so a changed cluster only redoes
+      arithmetic;
+    * ``comm`` — the per-state communication-time scalar per bandwidth
+      (kept scalar, summed in the same left-to-right order as
+      :func:`~repro.core.cost.stage_cost_from_segment`, which is what
+      keeps cached and from-scratch plans bit-identical).
+
+    The cache self-invalidates when the chain signature changes
+    (:meth:`ensure`), so holding one across a model/partition swap is
+    safe, just useless.
+    """
+
+    def __init__(self):
+        self.sig = None
+        self.segments: dict[tuple[int, int, int], "SegmentCost"] = {}
+        self.max_flops: dict[tuple[int, int, int], float] = {}
+        self.comm: dict[tuple, float] = {}
+        self.nodes: dict[tuple[int, int], frozenset] = {}
+        self.solutions: dict[tuple, tuple] = {}
+        self.hits = 0
+        self.misses = 0
+        self.solution_hits = 0
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+    def clear(self) -> None:
+        self.segments.clear()
+        self.max_flops.clear()
+        self.comm.clear()
+        self.nodes.clear()
+        self.solutions.clear()
+
+    def ensure(self, sig) -> "PlannerCache":
+        """Validate the cache against a chain signature; a mismatch
+        clears everything (a different graph/piece chain invalidates
+        all geometry)."""
+        if sig != self.sig:
+            self.clear()
+            self.sig = sig
+        return self
+
+    @staticmethod
+    def chain_signature(g: Graph, pieces: Sequence[Piece],
+                        input_size: tuple[int, int]) -> tuple:
+        """Content signature of everything the geometry depends on."""
+        layers = tuple(
+            (s.name, s.kind, tuple(s.kernel), tuple(s.stride),
+             tuple(s.padding), s.in_channels, s.out_channels,
+             s.flops_coeff, s.global_rf, s.tile_independent_flops)
+            for s in g.layers.values())
+        chain = tuple(tuple(sorted(p.nodes)) for p in pieces)
+        return (layers, tuple(g.edges), chain, tuple(input_size))
+
+
 class PipelineDP:
-    """Eq. 15 solver for a *homogeneous* cluster (use hetero.adjust after)."""
+    """Eq. 15 solver for a *homogeneous* cluster (use hetero.adjust after).
+
+    With ``cache=`` (a :class:`PlannerCache`) the solver switches to the
+    incremental hot path: segment geometry and communication scalars are
+    reused across builds, candidate stage costs are evaluated
+    numpy-vectorized over all split ranges, and an unchanged homogenized
+    signature reuses the solved DP table outright.  Plans from the two
+    paths are bit-identical (same arithmetic, same tie-breaking).
+    """
 
     def __init__(
         self,
@@ -68,6 +160,7 @@ class PipelineDP:
         input_size: tuple[int, int],
         t_lim: float = float("inf"),
         cost_table: CostTable | None = None,
+        cache: PlannerCache | None = None,
     ):
         self.g = g
         self.pieces = list(pieces)
@@ -75,6 +168,10 @@ class PipelineDP:
         self.input_size = input_size
         self.t_lim = t_lim
         self.cost_table = cost_table
+        self.cache = cache
+        if cache is not None:
+            cache.ensure(PlannerCache.chain_signature(g, self.pieces,
+                                                      input_size))
         self.full = g.forward_sizes(input_size)
         self._stage_cache: dict[tuple[int, int, int], StageCost] = {}
         # memo[(i, j, p)] = (period, latency, split) where split is either
@@ -82,15 +179,40 @@ class PipelineDP:
         self.memo: dict[tuple[int, int, int], tuple[float, float, object]] = {}
 
     # -- Ts(i, j, m): one stage over pieces i..j with m devices ---------
+    def _nodes(self, i: int, j: int) -> frozenset:
+        if self.cache is not None:
+            nodes = self.cache.nodes.get((i, j))
+            if nodes is None:
+                nodes = frozenset().union(*(p.nodes
+                                            for p in self.pieces[i:j + 1]))
+                self.cache.nodes[(i, j)] = nodes
+            return nodes
+        return frozenset().union(*(p.nodes for p in self.pieces[i:j + 1]))
+
+    def _segment(self, i: int, j: int, m: int):
+        """Device-independent geometry of one stage state (cached)."""
+        key = (i, j, m)
+        if self.cache is not None:
+            seg = self.cache.segments.get(key)
+            if seg is not None:
+                self.cache.hits += 1
+                return seg
+        seg = segment_cost(self.g, self._nodes(i, j), self.full,
+                           self.input_size, [1.0 / m] * m)
+        if self.cache is not None:
+            self.cache.segments[key] = seg
+            self.cache.misses += 1
+        return seg
+
     def stage(self, i: int, j: int, m: int) -> StageCost:
         key = (i, j, m)
         hit = self._stage_cache.get(key)
         if hit is None:
-            nodes = frozenset().union(*(p.nodes for p in self.pieces[i:j + 1]))
+            seg = self._segment(i, j, m)
             devs = self.cluster.devices[:m]
-            hit = stage_cost(self.g, nodes, self.full, self.input_size,
-                             devs, self.cluster, [1.0 / m] * m,
-                             cost_table=self.cost_table)
+            ratio = (self.cost_table.ratio(seg.nodes)
+                     if self.cost_table is not None else 1.0)
+            hit = stage_cost_from_segment(seg, devs, self.cluster, ratio)
             self._stage_cache[key] = hit
         return hit
 
@@ -125,6 +247,13 @@ class PipelineDP:
         return best[0], best[1]
 
     def build(self) -> PipelinePlan:
+        if self.cache is not None:
+            usig = self._uniform_sig()
+            if usig is not None:
+                return self._build_fast(usig)
+        return self._build_scalar()
+
+    def _build_scalar(self) -> PipelinePlan:
         t0 = time.perf_counter()
         L, D = len(self.pieces), len(self.cluster)
         per, lat = self.solve(0, L - 1, D)
@@ -133,7 +262,8 @@ class PipelineDP:
             # and flag it (paper: the limit is a soft preference)
             fallback = PipelineDP(self.g, self.pieces, self.cluster,
                                   self.input_size,
-                                  cost_table=self.cost_table).build()
+                                  cost_table=self.cost_table,
+                                  cache=self.cache).build()
             fallback.feasible = False
             fallback.wall_time_s += time.perf_counter() - t0
             return fallback
@@ -163,6 +293,161 @@ class PipelineDP:
             off += st.n_devices
         return PipelinePlan(stages, per, lat, time.perf_counter() - t0)
 
+    # -- incremental / vectorized hot path ------------------------------
+    def _uniform_sig(self) -> tuple | None:
+        """(capacity, alpha, bandwidth) when all devices are
+        indistinguishable and the link is flat — the invariant the
+        vectorized solver exploits (always true for ``homogenized()``
+        clusters, i.e. the Algorithm 2 input).  ``None`` otherwise."""
+        if self.cluster.pair_bandwidth:
+            return None
+        d0 = self.cluster.devices[0]
+        for d in self.cluster.devices[1:]:
+            if d.capacity != d0.capacity or d.alpha != d0.alpha:
+                return None
+        return (d0.capacity, d0.alpha, self.cluster.bandwidth)
+
+    def _ratio_sig(self):
+        ct = self.cost_table
+        if ct is None:
+            return None
+        return (ct.default, tuple(sorted((tuple(sorted(k)), v)
+                                         for k, v in ct.ratios.items())))
+
+    def _max_flops(self, a: int, j: int, m: int) -> float:
+        key = (a, j, m)
+        v = self.cache.max_flops.get(key)
+        if v is None:
+            v = max(self._segment(a, j, m).per_device_flops)
+            self.cache.max_flops[key] = v
+        return v
+
+    def _comm_scalar(self, a: int, j: int, m: int, bw: float) -> float:
+        # left-to-right scalar sum, exactly as stage_cost_from_segment,
+        # so the cached value is bit-identical to the fresh one (numpy
+        # pairwise reduction would not be)
+        key = (a, j, m, bw)
+        v = self.cache.comm.get(key)
+        if v is None:
+            seg = self._segment(a, j, m)
+            v = 0.0
+            for k in range(1, m):
+                v = v + (seg.in_bytes[k] + seg.out_bytes[k]) / bw
+            self.cache.comm[key] = v
+        return v
+
+    def _solve_fast(self, L: int, D: int, cap: float, alpha: float,
+                    bw: float) -> tuple:
+        """Bottom-up vectorized Eq. 15.  Only ``i == 0`` head states are
+        reachable from ``solve(0, L-1, D)``, so the table is 2-D over
+        (j, p); tails Ts(s+1, j, m) are priced in batch from cached
+        segment geometry.  Tie-breaking replicates the scalar solver:
+        lexicographic (period, latency), single-stage option first, then
+        earliest (s, m) in s-major/m-minor order."""
+        inf = float("inf")
+        # TT[a, j, m] = stage total for pieces a..j on m devices.
+        # a == 0 serves option A (m up to D); a >= 1 serves tails (m < D).
+        TT = np.full((L, L, D + 1), inf)
+        for j in range(L):
+            for a in range(j + 1):
+                mmax = D if a == 0 else D - 1
+                if mmax < 1:
+                    continue
+                ratio = (self.cost_table.ratio(self._nodes(a, j))
+                         if self.cost_table is not None else 1.0)
+                max_f = np.array([self._max_flops(a, j, m)
+                                  for m in range(1, mmax + 1)])
+                comm = np.array([self._comm_scalar(a, j, m, bw)
+                                 for m in range(1, mmax + 1)])
+                # elementwise ops in the same order as Device.t_comp()*ratio
+                # (max over identical devices commutes with the positive
+                # scaling, so max_flops stands in for max(per-device comp))
+                TT[a, j, 1:mmax + 1] = ((alpha * max_f) / cap) * ratio + comm
+
+        t_lim = self.t_lim
+        P = np.full((L, D + 1), inf)
+        Lat = np.full((L, D + 1), inf)
+        S = np.full((L, D + 1), -1, dtype=np.int64)
+        M = np.zeros((L, D + 1), dtype=np.int64)
+        for p in range(1, D + 1):
+            for j in range(L):
+                # option A: single stage over all p devices
+                per_a = TT[0, j, p]
+                if per_a <= t_lim:
+                    best_per, best_lat = per_a, per_a
+                else:
+                    best_per, best_lat = inf, per_a
+                bs, bm = -1, 0
+                if p > 1 and j > 0:
+                    # candidate grid: rows s in [0, j), cols c -> m = c+1
+                    heads_per = P[0:j, 1:p][:, ::-1]     # P[s, p-m]
+                    heads_lat = Lat[0:j, 1:p][:, ::-1]
+                    tails = TT[1:j + 1, j, 1:p]          # Ts(s+1, j, m)
+                    cand_per = np.maximum(heads_per, tails)
+                    cand_lat = heads_lat + tails
+                    valid = cand_lat <= t_lim
+                    if valid.any():
+                        per_m = np.where(valid, cand_per, inf)
+                        lat_m = np.where(valid, cand_lat, inf)
+                        min_per = per_m.min()
+                        min_lat = np.where(per_m == min_per, lat_m, inf).min()
+                        if (min_per < best_per
+                                or (min_per == best_per
+                                    and min_lat < best_lat)):
+                            first = int(np.argmax((per_m == min_per)
+                                                  & (lat_m == min_lat)))
+                            s_idx, c_idx = divmod(first, p - 1)
+                            best_per, best_lat = min_per, min_lat
+                            bs, bm = s_idx, c_idx + 1
+                P[j, p] = best_per
+                Lat[j, p] = best_lat
+                S[j, p] = bs
+                M[j, p] = bm
+        return P, Lat, S, M
+
+    def _build_fast(self, usig: tuple) -> PipelinePlan:
+        t0 = time.perf_counter()
+        L, D = len(self.pieces), len(self.cluster)
+        cap, alpha, bw = usig
+        key = (L, D, cap, alpha, bw, self.t_lim, self._ratio_sig())
+        sol = self.cache.solutions.get(key)
+        if sol is None:
+            sol = self._solve_fast(L, D, cap, alpha, bw)
+            self.cache.solutions[key] = sol
+        else:
+            self.cache.solution_hits += 1
+        P, Lat, S, M = sol
+        per, lat = float(P[L - 1, D]), float(Lat[L - 1, D])
+        if per == float("inf"):
+            fallback = PipelineDP(self.g, self.pieces, self.cluster,
+                                  self.input_size,
+                                  cost_table=self.cost_table,
+                                  cache=self.cache).build()
+            fallback.feasible = False
+            fallback.wall_time_s += time.perf_counter() - t0
+            return fallback
+        stages: list[StagePlan] = []
+
+        def walk(j: int, p: int):
+            s, m = int(S[j, p]), int(M[j, p])
+            if s < 0:
+                sc = self.stage(0, j, p)
+                stages.append(StagePlan(0, j, list(self.cluster.devices[:p]),
+                                        sc.seg.nodes, sc, [1.0 / p] * p))
+            else:
+                walk(s, p - m)
+                sc = self.stage(s + 1, j, m)
+                stages.append(StagePlan(s + 1, j,
+                                        list(self.cluster.devices[:m]),
+                                        sc.seg.nodes, sc, [1.0 / m] * m))
+
+        walk(L - 1, D)
+        off = 0
+        for st in stages:
+            st.devices = list(self.cluster.devices[off:off + st.n_devices])
+            off += st.n_devices
+        return PipelinePlan(stages, per, lat, time.perf_counter() - t0)
+
 
 def plan_pipeline(
     g: Graph,
@@ -171,6 +456,7 @@ def plan_pipeline(
     input_size: tuple[int, int],
     t_lim: float = float("inf"),
     cost_table: CostTable | None = None,
+    cache: PlannerCache | None = None,
 ) -> PipelinePlan:
     return PipelineDP(g, pieces, cluster, input_size, t_lim,
-                      cost_table=cost_table).build()
+                      cost_table=cost_table, cache=cache).build()

@@ -18,14 +18,29 @@ from .graph import Graph
 from .cost import Cluster, CostTable, stage_cost
 from .partition import (Piece, PartitionResult, partition_graph,
                         partition_graph_dnc)
-from .pipeline_dp import PipelineDP, PipelinePlan, StagePlan
+from .pipeline_dp import PipelineDP, PipelinePlan, PlannerCache, StagePlan
 from .hetero import adjust_stages
+
+# Provenance of a PicoPlan (threaded through ServeReport's repartition
+# audit and the fleet registry):
+#   scratch     — full Algorithm 1 + 2 + 3 run, nothing reused
+#   incremental — piece chain and/or PlannerCache state reused; only
+#                 device-dependent work re-ran
+#   registry    — an identical (model, cluster, spec) plan was served
+#                 from a fleet PlanRegistry without planning at all
+PLAN_SOURCES = ("scratch", "incremental", "registry")
 
 
 @dataclass
 class PicoPlan:
     partition: PartitionResult
     pipeline: PipelinePlan
+    source: str = "scratch"
+
+    def __post_init__(self):
+        if self.source not in PLAN_SOURCES:
+            raise ValueError(f"source must be one of {PLAN_SOURCES}, "
+                             f"got {self.source!r}")
 
     @property
     def period(self) -> float:
@@ -49,6 +64,7 @@ def plan_with_spec(
     pieces: Sequence[Piece] | None = None,
     partition: PartitionResult | None = None,
     cost_table: CostTable | None = None,
+    planner_cache: PlannerCache | None = None,
 ) -> PicoPlan:
     """Run the full PICO optimization under a :class:`PlanSpec`.
 
@@ -63,6 +79,12 @@ def plan_with_spec(
     without fabricating degenerate partition metadata.  ``cost_table``
     (from ``exec.calibrate``) substitutes measured per-segment compute
     costs for the analytic alpha model in every stage costing.
+
+    ``planner_cache`` (a :class:`~repro.core.pipeline_dp.PlannerCache`
+    owned by the caller and passed to every re-plan of the same model)
+    turns Algorithm 2 into the incremental hot path: segment geometry
+    survives device churn, and the resulting plan's ``source`` is
+    ``"incremental"`` whenever cached work was actually reused.
     """
     spec = spec or PlanSpec()
     with obs_trace.current().wall_span(
@@ -86,13 +108,19 @@ def plan_with_spec(
                 part = partition_graph(g, input_size, n_split,
                                        spec.max_diameter)
 
+        # a cache is "warm" when it already holds geometry for this
+        # exact chain — only then is the plan genuinely incremental
+        warm = (planner_cache is not None and len(planner_cache) > 0
+                and planner_cache.sig == PlannerCache.chain_signature(
+                    g, part.pieces, input_size))
         homo = cluster.homogenized()
         dp = PipelineDP(g, part.pieces, homo, input_size, spec.t_lim,
-                        cost_table=cost_table)
+                        cost_table=cost_table, cache=planner_cache)
         homo_plan = dp.build()
         final = adjust_stages(homo_plan, cluster, g, input_size,
                               cost_table=cost_table)
-    return PicoPlan(part, final)
+    return PicoPlan(part, final,
+                    source="incremental" if warm else "scratch")
 
 
 def plan(
@@ -141,6 +169,7 @@ def replan(
     t_lim: float = _UNSET,
     cost_table: CostTable | None = None,
     spec: PlanSpec | None = None,
+    planner_cache: PlannerCache | None = None,
 ) -> PicoPlan:
     """Incremental re-plan after a cluster change (runtime feedback loop).
 
@@ -162,7 +191,8 @@ def replan(
                         "replan(..., spec=PlanSpec(...))")
         spec = PlanSpec(t_lim=pick(t_lim, float("inf")))
     return plan_with_spec(g, cluster, input_size, spec,
-                          partition=prev.partition, cost_table=cost_table)
+                          partition=prev.partition, cost_table=cost_table,
+                          planner_cache=planner_cache)
 
 
 @dataclass
@@ -237,6 +267,7 @@ def partition_cluster(
     cost_table: CostTable | None = None,
     prev: Sequence[PicoPlan | None] | None = None,
     plan_specs: Sequence[PlanSpec | None] | None = None,
+    plan_fn=None,
 ) -> ClusterPartition:
     """Split one cluster's devices across several co-hosted models and
     run the PICO optimization on each sub-cluster (the many-to-many
@@ -252,6 +283,12 @@ def partition_cluster(
     redo the device-dependent planning steps.  ``plan_specs[i]`` carries
     tenant ``i``'s planner knobs; ``t_lims`` is the legacy equivalent
     (ignored where a spec is given).
+
+    ``plan_fn(i, model, sub_cluster, spec, prev_plan) -> PicoPlan``
+    overrides how each share is planned — the hook the serving scheduler
+    and fleet tier use to route through per-tenant
+    :class:`~repro.core.pipeline_dp.PlannerCache` instances or a fleet
+    :class:`~repro.fleet.registry.PlanRegistry`.
     """
     n = len(models)
     if n == 0:
@@ -270,10 +307,13 @@ def partition_cluster(
             t_lim = t_lims[i] if t_lims is not None else float("inf")
             spec = PlanSpec(t_lim=t_lim)
         prev_i = prev[i] if prev is not None else None
-        pico = plan_with_spec(
-            m.graph, sub, m.input_size, spec,
-            partition=prev_i.partition if prev_i is not None else None,
-            cost_table=cost_table)
+        if plan_fn is not None:
+            pico = plan_fn(i, m, sub, spec, prev_i)
+        else:
+            pico = plan_with_spec(
+                m.graph, sub, m.input_size, spec,
+                partition=prev_i.partition if prev_i is not None else None,
+                cost_table=cost_table)
         shares.append(TenantShare(i, sub, pico))
     return ClusterPartition(shares, w)
 

@@ -1,0 +1,32 @@
+"""``repro.fleet`` — the tier above one :class:`ServingScheduler`.
+
+Production scale is thousands of clusters serving the same handful of
+models: planning must not be redone per cluster.  This package supplies
+
+* :class:`~repro.fleet.registry.PlanRegistry` — an LRU cache of
+  finished :class:`~repro.core.planner.PicoPlan` artifacts keyed by
+  ``(model fingerprint, cluster signature, PlanSpec, CostTable)``, so
+  an identical cluster anywhere in the fleet gets its plan without
+  running the optimizer (DynO's serialized plan hand-off, fleet-wide);
+* :class:`~repro.fleet.router.FleetRouter` — admission/routing of
+  tenants across cells driven by the same load-EWMA convention the
+  serving scheduler uses, with device-churn handling that re-plans
+  through per-model :class:`~repro.core.pipeline_dp.PlannerCache`
+  instances (the incremental planner hot path);
+* :class:`~repro.fleet.autoscale.Autoscaler` — watermark policy over
+  smoothed cell load with provision/decommission hooks.
+
+Everything is configured by one frozen
+:class:`~repro.api.specs.FleetSpec` and observable through
+``repro.obs`` (``fleet.*`` metrics, ``registry.lookup`` /
+``fleet.route`` / ``fleet.autoscale`` spans).
+"""
+
+from .registry import PlanRegistry, cluster_signature, fingerprint_model
+from .router import Admission, Cell, FleetRouter, Tenant
+from .autoscale import Autoscaler, ScaleDecision
+
+__all__ = [
+    "Admission", "Autoscaler", "Cell", "FleetRouter", "PlanRegistry",
+    "ScaleDecision", "Tenant", "cluster_signature", "fingerprint_model",
+]

@@ -51,6 +51,9 @@ SPAN_NAMES = (
     "sched.coalesce",   # stage-0 batch formation
     "sched.drain",      # drain window before a re-plan / re-partition
     "sched.repartition",  # cross-tenant device re-split + migration
+    "registry.lookup",  # fleet plan-registry probe (hit or miss)
+    "fleet.route",      # tenant admission / routing decision
+    "fleet.autoscale",  # autoscaler watermark evaluation
 )
 
 #: Default track for host-side (wall-clock) spans.

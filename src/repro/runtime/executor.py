@@ -52,7 +52,7 @@ import numpy as np
 from ..api._compat import _UNSET, pick, unset, warn_legacy
 from ..api.specs import ExecSpec, PlanSpec
 from ..core.cost import Cluster, CostTable
-from ..core.pipeline_dp import StagePlan
+from ..core.pipeline_dp import PlannerCache, StagePlan
 from ..core.planner import PicoPlan, plan_with_spec, recost
 from ..core.graph import Graph
 from ..obs import trace as obs_trace
@@ -253,9 +253,13 @@ class PipelineRuntime:
         self.cost_table = cost_table
         self.config = config or RuntimeConfig()
         self.rng = np.random.default_rng(self.config.seed)
+        # persistent incremental-planner state: churn/drift re-plans
+        # reuse the segment geometry of every earlier plan of this model
+        self.planner_cache = PlannerCache()
         self.pico = pico or plan_with_spec(g, cluster, input_size,
                                            self.plan_spec,
-                                           cost_table=cost_table)
+                                           cost_table=cost_table,
+                                           planner_cache=self.planner_cache)
         self.tracer = tracer if tracer is not None else (
             Tracer() if self.config.trace else NULL_TRACER)
         self.metrics = metrics if metrics is not None else (
@@ -729,7 +733,8 @@ class PipelineRuntime:
         with obs_trace.scoped(self.tracer):
             new = plan_with_spec(self.g, calibrated, self.input_size,
                                  self.plan_spec, partition=old.partition,
-                                 cost_table=self.cost_table)
+                                 cost_table=self.cost_table,
+                                 planner_cache=self.planner_cache)
             # keep the incumbent plan if it is still runnable and wins
             # when both are priced with measured costs (the DP must use
             # every device, so a fresh plan can lose — e.g. after a

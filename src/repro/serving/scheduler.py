@@ -38,7 +38,9 @@ from typing import Mapping, Sequence
 from ..api._compat import _UNSET, pick, unset, warn_legacy
 from ..api.specs import ExecSpec, PlanSpec
 from ..core.cost import Cluster, CostTable
-from ..core.planner import PicoPlan, partition_cluster, split_devices
+from ..core.pipeline_dp import PlannerCache
+from ..core.planner import (PicoPlan, partition_cluster, plan_with_spec,
+                            split_devices)
 from ..data.pipeline import Request
 from ..exec.cache import CacheStats, cache_stats
 from ..obs import trace as obs_trace
@@ -105,6 +107,9 @@ class RepartitionRecord:
     migration_s: float
     assignment: dict[str, tuple[str, ...]]
     periods: dict[str, float]
+    # honest per-tenant plan provenance for this repartition:
+    # scratch | incremental | registry (see core.planner.PLAN_SOURCES)
+    plan_sources: dict[str, str] = field(default_factory=dict)
 
 
 @dataclass
@@ -201,7 +206,8 @@ class ServingScheduler:
                  config: SchedulerConfig | None = None,
                  backend: str | None = _UNSET,
                  cost_table: CostTable | None = None,
-                 exec_spec: ExecSpec | None = None):
+                 exec_spec: ExecSpec | None = None,
+                 registry=None):
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in {names}")
@@ -217,6 +223,12 @@ class ServingScheduler:
         self.config = config or SchedulerConfig()
         self.exec_spec = exec_spec or ExecSpec(backend=pick(backend, None))
         self.cost_table = cost_table
+        # optional fleet PlanRegistry: repartitions consult it before
+        # planning, and publish fresh plans back for the rest of the
+        # fleet.  Per-tenant PlannerCaches keep even registry misses on
+        # the incremental hot path.
+        self.registry = registry
+        self._planner_caches: dict[str, PlannerCache] = {}
         rc = self.config.runtime
         # one shared span sink + registry across every tenant runtime,
         # so the whole serve renders on a single Perfetto timeline
@@ -230,7 +242,8 @@ class ServingScheduler:
             [t.model for t in tenants], cluster,
             weights=[t.weight for t in tenants],
             plan_specs=[t.planner_spec() for t in tenants],
-            cost_table=cost_table)
+            cost_table=cost_table,
+            plan_fn=self._make_plan_fn([t.name for t in tenants]))
         for share, ts in zip(self.partition.shares, self._tenants.values()):
             ts.share = share
         self._loaded = False
@@ -239,6 +252,30 @@ class ServingScheduler:
     @property
     def backend(self) -> str | None:
         return self.exec_spec.backend
+
+    def _cache_for(self, name: str) -> PlannerCache:
+        return self._planner_caches.setdefault(name, PlannerCache())
+
+    def _make_plan_fn(self, names: Sequence[str]):
+        """The :func:`~repro.core.planner.partition_cluster` hook:
+        registry-first (an identical sub-cluster anywhere in the fleet
+        already has this plan), else the incremental planner with the
+        tenant's persistent :class:`PlannerCache` and prior piece
+        chain.  Fresh plans are published back to the registry."""
+        def plan_fn(i, model, sub, spec, prev_i):
+            if self.registry is not None:
+                hit = self.registry.get(model, sub, spec, self.cost_table)
+                if hit is not None:
+                    return hit
+            pico = plan_with_spec(
+                model.graph, sub, model.input_size, spec,
+                partition=prev_i.partition if prev_i is not None else None,
+                cost_table=self.cost_table,
+                planner_cache=self._cache_for(names[i]))
+            if self.registry is not None:
+                self.registry.put(model, sub, spec, pico, self.cost_table)
+            return pico
+        return plan_fn
 
     # ------------------------------------------------------------------
 
@@ -610,7 +647,8 @@ class ServingScheduler:
             plan_specs=[ts.cfg.planner_spec() for ts in active],
             cost_table=self.cost_table,
             prev=[ts.share.pico if ts.share is not None else None
-                  for ts in active])
+                  for ts in active],
+            plan_fn=self._make_plan_fn([ts.cfg.name for ts in active]))
         # migration: only stages whose host set actually changed push
         # their parameters (same rule as the runtime's internal re-plan)
         mig_bytes = 0.0
@@ -642,13 +680,18 @@ class ServingScheduler:
                              generation=self._generation,
                              migration_bytes=mig_bytes,
                              tenants=[ts.cfg.name for ts in active])
+        for ts in active:
+            self.metrics.counter("serve.replans",
+                                 source=ts.share.pico.source).inc()
         self.repartitions.append(RepartitionRecord(
             time=t, reason=reason, wall_s=_time.perf_counter() - wall0,
             migration_bytes=mig_bytes, migration_s=mig_s,
             assignment={ts.cfg.name: tuple(d.name for d in
                                            ts.share.cluster.devices)
                         for ts in active},
-            periods={ts.cfg.name: ts.share.pico.period for ts in active}))
+            periods={ts.cfg.name: ts.share.pico.period for ts in active},
+            plan_sources={ts.cfg.name: ts.share.pico.source
+                          for ts in active}))
 
     # ------------------------------------------------------------------
     # reporting

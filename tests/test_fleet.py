@@ -1,0 +1,334 @@
+"""Fleet tier: plan registry, router, autoscaler, incremental planner
+equivalence (property-style), and PlanSource provenance threading."""
+
+import dataclasses
+
+import pytest
+
+from repro.api import FleetSpec, PlanSpec
+from repro.api import artifacts
+from repro.api.specs import spec_from_dict
+from repro.core import Cluster, make_pi_cluster
+from repro.core.pipeline_dp import PlannerCache
+from repro.core.planner import PicoPlan, plan_with_spec
+from repro.fleet import (Autoscaler, FleetRouter, PlanRegistry, Tenant,
+                         cluster_signature, fingerprint_model)
+from repro.models.cnn import zoo
+from repro.obs.metrics import MetricsRegistry
+
+from _hypothesis_compat import given, settings, st
+
+
+def _renamed(cluster, prefix):
+    return Cluster([dataclasses.replace(d, name=f"{prefix}.{d.name}")
+                    for d in cluster.devices], bandwidth=cluster.bandwidth)
+
+
+def _sig(p: PicoPlan) -> tuple:
+    """Exact plan identity — no tolerance anywhere."""
+    return (p.period, p.latency, p.pipeline.feasible,
+            tuple((sp.first_piece, sp.last_piece,
+                   tuple(d.name for d in sp.devices), tuple(sp.fractions),
+                   sp.cost.total, sp.cost.t_comp, sp.cost.t_comm)
+                  for sp in p.pipeline.stages))
+
+
+# ---------------------------------------------------------------------------
+# incremental PipelineDP == full recompute (property-style)
+# ---------------------------------------------------------------------------
+
+_MODELS = [
+    zoo.squeezenet(input_size=(64, 64), scale=0.25),
+    zoo.mobilenetv3(input_size=(64, 64), scale=0.25),
+    zoo.resnet34(input_size=(64, 64), scale=0.1),
+]
+_BASE_CAPS = [1.5, 1.2, 1.0, 1.0, 0.8, 0.8]
+
+
+@settings(max_examples=10, deadline=None)
+@given(model_i=st.integers(0, len(_MODELS) - 1),
+       toggles=st.lists(st.integers(0, len(_BASE_CAPS) - 1),
+                        min_size=1, max_size=4))
+def test_incremental_equals_scratch_under_churn(model_i, toggles):
+    """Random single-device drop/join sequences: the incremental path
+    (shared PlannerCache) must produce bit-identical plans to a full
+    recompute at every step."""
+    model = _MODELS[model_i]
+    base = make_pi_cluster(_BASE_CAPS)
+    spec = PlanSpec()
+    cache = PlannerCache()
+    seed = plan_with_spec(model.graph, base, model.input_size, spec,
+                          planner_cache=cache)
+    assert seed.source == "scratch"
+    active = set(range(len(_BASE_CAPS)))
+    for i in toggles:
+        if i in active and len(active) > 1:
+            active.remove(i)       # device drop
+        else:
+            active.add(i)          # device (re)join
+        cluster = base.restricted([base.devices[k] for k in sorted(active)])
+        inc = plan_with_spec(model.graph, cluster, model.input_size, spec,
+                             partition=seed.partition, planner_cache=cache)
+        full = plan_with_spec(model.graph, cluster, model.input_size, spec,
+                              partition=seed.partition)
+        assert inc.source == "incremental"
+        assert full.source == "scratch"
+        assert _sig(inc) == _sig(full)
+
+
+def test_incremental_equals_scratch_one_drop():
+    """Non-hypothesis twin of the property test (runs on minimal
+    installs): one drop on the heterogeneous 8-device cluster."""
+    model = _MODELS[0]
+    base = make_pi_cluster([1.5, 1.5, 1.2, 1.2, 1.0, 1.0, 0.8, 0.8])
+    cache = PlannerCache()
+    seed = plan_with_spec(model.graph, base, model.input_size,
+                          planner_cache=cache)
+    smaller = base.restricted(base.devices[1:])
+    inc = plan_with_spec(model.graph, smaller, model.input_size,
+                         partition=seed.partition, planner_cache=cache)
+    full = plan_with_spec(model.graph, smaller, model.input_size,
+                          partition=seed.partition)
+    assert inc.source == "incremental" and full.source == "scratch"
+    assert _sig(inc) == _sig(full)
+    assert cache.hits > 0
+
+
+# ---------------------------------------------------------------------------
+# PlanRegistry
+# ---------------------------------------------------------------------------
+
+def _cluster4():
+    return make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+
+
+def test_registry_hit_miss_and_isolation():
+    reg = PlanRegistry(capacity=8, metrics=MetricsRegistry())
+    model = _MODELS[0]
+    c = _cluster4()
+    first = reg.get_or_plan(model, c)
+    assert first.source == "scratch" and reg.misses == 1
+    second = reg.get_or_plan(model, c)
+    assert second.source == "registry" and reg.hits == 1
+    assert _sig(second)[:2] == _sig(first)[:2]
+    # hits decode fresh objects: mutating one never corrupts the cache
+    second.pipeline.stages[0].fractions[0] = -1.0
+    third = reg.get_or_plan(model, c)
+    assert third.pipeline.stages[0].fractions[0] != -1.0
+
+
+def test_registry_name_insensitive_rebind():
+    """Identical hardware under different device names is one planning
+    problem; the served plan's devices are rebound onto the caller's."""
+    reg = PlanRegistry(metrics=MetricsRegistry())
+    model = _MODELS[1]
+    a, b = _cluster4(), _renamed(_cluster4(), "podB")
+    assert cluster_signature(a) == cluster_signature(b)
+    pa = reg.get_or_plan(model, a)
+    pb = reg.get_or_plan(model, b)
+    assert pb.source == "registry"
+    assert pb.period == pa.period and pb.latency == pa.latency
+    served = {d.name for sp in pb.pipeline.stages for d in sp.devices}
+    assert served <= {d.name for d in b.devices}
+
+
+def test_registry_key_discriminates():
+    reg = PlanRegistry(metrics=MetricsRegistry())
+    model = _MODELS[0]
+    c = _cluster4()
+    reg.get_or_plan(model, c, PlanSpec())
+    # different spec, different cluster shape, different model: all miss
+    assert reg.get(model, c, PlanSpec(t_lim=0.5)) is None
+    assert reg.get(model, make_pi_cluster([1.0, 1.0]), PlanSpec()) is None
+    assert reg.get(_MODELS[2], c, PlanSpec()) is None
+    assert fingerprint_model(_MODELS[0]) != fingerprint_model(_MODELS[2])
+
+
+def test_registry_lru_eviction():
+    reg = PlanRegistry(capacity=2, metrics=MetricsRegistry())
+    model = _MODELS[0]
+    c1, c2, c3 = (make_pi_cluster([1.0] * n) for n in (2, 3, 4))
+    reg.get_or_plan(model, c1)
+    reg.get_or_plan(model, c2)
+    reg.get_or_plan(model, c1)          # refresh c1
+    reg.get_or_plan(model, c3)          # evicts c2 (least recent)
+    assert len(reg) == 2
+    assert reg.get(model, c1) is not None
+    assert reg.get(model, c2) is None
+
+
+def test_registry_json_round_trip():
+    reg = PlanRegistry(capacity=4, metrics=MetricsRegistry())
+    model = _MODELS[0]
+    c = _cluster4()
+    reg.get_or_plan(model, c)
+    loaded = PlanRegistry.from_json(reg.to_json())
+    assert len(loaded) == 1
+    hit = loaded.get(model, c)
+    assert hit is not None and hit.source == "registry"
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter + Autoscaler
+# ---------------------------------------------------------------------------
+
+def _router(routing="least_loaded", **kw):
+    cells = {"a": make_pi_cluster([1.5, 1.2, 1.0, 0.8]),
+             "b": _renamed(make_pi_cluster([1.5, 1.2, 1.0, 0.8]), "b")}
+    return FleetRouter(cells, spec=FleetSpec(routing=routing, **kw),
+                       metrics=MetricsRegistry())
+
+
+def test_router_least_loaded_follows_ewma():
+    r = _router()
+    r.observe("a", 0.9)
+    r.observe("b", 0.1)
+    adm = r.admit(Tenant("t0", _MODELS[0]))
+    assert adm.cell == "b"
+    # the load picture flips: beta=0.3 smoothing needs a few samples
+    for _ in range(4):
+        r.observe("b", 0.95)
+        r.observe("a", 0.05)
+    assert r.cell_load("a") < r.cell_load("b")
+    assert r.admit(Tenant("t1", _MODELS[1])).cell == "a"
+
+
+def test_router_round_robin_and_registry_hits():
+    r = _router(routing="round_robin")
+    adms = [r.admit(Tenant(f"t{i}", _MODELS[0])) for i in range(4)]
+    assert [a.cell for a in adms] == ["a", "b", "a", "b"]
+    # cells a and b are identical hardware: after the first scratch
+    # plan, every admission is a registry hit (name-insensitive)
+    assert [a.plan_source for a in adms] == \
+        ["scratch", "registry", "registry", "registry"]
+
+
+def test_router_churn_is_incremental():
+    r = _router()
+    r.admit(Tenant("t0", _MODELS[0]))
+    cell = next(c for c in r.cells.values() if c.tenants)
+    smaller = cell.cluster.restricted(cell.cluster.devices[:-1])
+    replanned = r.churn(cell.name, smaller)
+    assert replanned["t0"].source == "incremental"
+    # the twin cell's 4-device shape is already registered: admitting
+    # the same model there is a pure registry hit
+    adm = r.admit(Tenant("t1", _MODELS[0]))
+    assert adm.cell != cell.name
+    assert adm.plan_source == "registry"
+
+
+def test_router_evict_and_remove_cell():
+    r = _router(max_clusters=3)
+    r.admit(Tenant("t0", _MODELS[0]))
+    assert r.evict("t0") is not None
+    assert r.evict("t0") is None and not r.plans
+    r.observe("a", 0.5)
+    r.observe("b", 0.1)
+    adm = r.admit(Tenant("t1", _MODELS[0]))
+    moved = r.remove_cell(adm.cell)
+    assert [m.tenant for m in moved] == ["t1"]
+    assert len(r.cells) == 1
+    with pytest.raises(ValueError):
+        r.remove_cell(next(iter(r.cells)))     # min_clusters=1
+
+
+def test_autoscaler_watermarks_and_hooks():
+    r = _router(max_clusters=4)
+    r.observe("a", 0.95)                       # above scale_up_load=0.8
+    r.observe("b", 0.05)                       # below scale_down_load=0.25
+    supplied = []
+
+    def provision(router, decision):
+        name = f"new{len(supplied)}"
+        supplied.append(name)
+        return name, make_pi_cluster([1.0, 1.0])
+
+    sc = Autoscaler(r, provision=provision,
+                    decommission=lambda router, d: True,
+                    metrics=MetricsRegistry())
+    decisions = {d.cell: d for d in sc.evaluate()}
+    assert decisions["a"].action == "scale_up" and decisions["a"].applied
+    assert decisions["b"].action == "scale_down" and decisions["b"].applied
+    assert supplied == ["new0"] and "new0" in r.cells
+    assert "b" not in r.cells
+
+
+def test_autoscaler_holds_in_band_and_respects_bounds():
+    r = _router(max_clusters=2)
+    r.observe("a", 0.5)
+    r.observe("b", 0.95)
+    sc = Autoscaler(r, provision=lambda rt, d: ("x", make_pi_cluster([1.0])),
+                    metrics=MetricsRegistry())
+    decisions = {d.cell: d for d in sc.evaluate()}
+    assert decisions["a"].action == "hold"
+    assert decisions["b"].action == "scale_up" and not decisions["b"].applied
+    assert decisions["b"].detail == "at max_clusters"
+
+
+# ---------------------------------------------------------------------------
+# PlanSource provenance threading
+# ---------------------------------------------------------------------------
+
+def test_plan_source_validation_and_artifact_round_trip():
+    plan = plan_with_spec(_MODELS[0].graph, _cluster4(),
+                          _MODELS[0].input_size)
+    with pytest.raises(ValueError):
+        PicoPlan(plan.partition, plan.pipeline, source="cached")
+    plan.source = "incremental"
+    loaded = artifacts.plan_from_json(artifacts.plan_to_json(plan))
+    assert loaded.source == "incremental"
+    # pre-provenance artifacts (no "source" field) load as scratch
+    d = artifacts.plan_to_dict(plan)
+    d.pop("source")
+    assert artifacts.plan_from_dict(d).source == "scratch"
+
+
+def test_scheduler_repartition_audits_plan_sources():
+    from repro.runtime import DeviceLeave
+    from repro.serving import (OpenLoopGenerator, SchedulerConfig,
+                               ServingScheduler, TenantConfig)
+    cluster = make_pi_cluster([1.5, 1.2, 1.0, 1.0, 0.8, 0.8])
+    tenants = [TenantConfig("a", _MODELS[0]), TenantConfig("b", _MODELS[2])]
+    sched = ServingScheduler(tenants, cluster,
+                             config=SchedulerConfig(
+                                 seed=5, migration_bandwidth=1e9))
+    wl = {}
+    for i, ts in enumerate(sched._tenants.values()):
+        rate = 0.6 / ts.share.pico.period
+        wl[ts.cfg.name] = OpenLoopGenerator(rate_per_s=rate,
+                                            seed=3 + i).generate(40)
+    horizon = max(r.arrival for rs in wl.values() for r in rs)
+    weakest = min(cluster.devices, key=lambda d: d.capacity)
+    rep = sched.serve(wl, churn=[DeviceLeave(0.5 * horizon, weakest.name)])
+    leaves = [r for r in rep.repartitions if r.reason == "leave"]
+    assert leaves
+    for r in leaves:
+        assert set(r.plan_sources) == {"a", "b"}
+        # surviving tenants re-plan on the warm path, never from scratch
+        assert set(r.plan_sources.values()) <= {"incremental", "registry"}
+
+
+def test_deployment_replan_is_incremental():
+    import repro
+    dep = repro.compile(_MODELS[0], make_pi_cluster([1.5, 1.2, 1.0, 0.8]))
+    assert dep.pico.source == "scratch"
+    dep2 = dep.replan(make_pi_cluster([1.5, 1.2, 1.0]))
+    assert dep2.pico.source == "incremental"
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_validation_and_round_trip():
+    spec = FleetSpec(registry_capacity=8, routing="round_robin",
+                     scale_up_load=0.9, scale_down_load=0.1,
+                     max_clusters=3)
+    again = spec_from_dict(spec.to_dict())
+    assert again == spec
+    for bad in (dict(registry_capacity=0), dict(routing="random"),
+                dict(ewma_beta=0.0), dict(ewma_beta=1.5),
+                dict(scale_up_load=0.2, scale_down_load=0.3),
+                dict(min_clusters=0), dict(min_clusters=3, max_clusters=2)):
+        with pytest.raises(ValueError):
+            FleetSpec(**bad)
