@@ -1,0 +1,120 @@
+"""Multi-objective Pareto front benchmark: ``repro.plan_front`` sweep.
+
+For each model, sweep the configuration space (device subsets x latency
+budgets, one shared :class:`~repro.core.pipeline_dp.PlannerCache`) and
+check the front's contract against the single-objective planner:
+
+* **non-dominated** — every pair of front points is mutually
+  non-dominated over (period, latency, energy, memory);
+* **contains the optimum** — some front point is at least as good as
+  the pure-throughput plan on *every* axis (the plan itself, or, on
+  comm-bound models where extra devices only add idle energy, one that
+  strictly dominates it);
+* **wins** — front points that beat the throughput-only plan on energy
+  or peak memory at equal-or-better latency: the trade-off the sweep
+  exists to surface.
+
+Rows::
+
+    pareto.<model>    sweep us, points=N;nondominated=<1|0>;
+                      contains_opt=<1|0>;wins=K
+    pareto.summary    total us, front_ok=<1|0>;wins=<total>      (gated)
+
+``front_ok`` is 1.0 only when every model's front is mutually
+non-dominated AND contains the optimum; ``wins`` sums over models and
+must stay >= 1 (the acceptance bar: at least one front point dominates
+the throughput-only plan on energy or memory at no latency cost).
+"""
+
+from __future__ import annotations
+
+from .common import Timer, csv_row, make_pi_cluster
+from repro.core import plan_front, plan_metrics
+from repro.core.pareto import dominates
+from repro.core.planner import plan_with_spec
+from repro.models.cnn import zoo
+
+CAPS = [1.5, 1.2, 1.0, 0.8]            # 4-device hetero Pi cluster
+
+SMOKE = dict(size=(64, 64), scale=0.25,
+             models=("vgg16", "squeezenet", "resnet34"))
+FULL = dict(size=(224, 224), scale=1.0,
+            models=("vgg16", "squeezenet", "resnet34"))
+
+
+def _wins(front, base_metrics) -> int:
+    """Front points beating the throughput plan on energy or memory at
+    equal-or-better latency (strictly better somewhere, never worse on
+    latency)."""
+    n = 0
+    for p in front.points:
+        if p.latency <= base_metrics.latency and (
+                p.energy_j < base_metrics.energy_j
+                or p.memory_bytes < base_metrics.memory_bytes):
+            n += 1
+    return n
+
+
+def run(smoke: bool = False) -> list[str]:
+    rows = []
+    cfg = SMOKE if smoke else FULL
+    cluster = make_pi_cluster(CAPS)
+    all_ok = True
+    total_wins = 0
+    total_us = 0.0
+    for name in cfg["models"]:
+        scale = cfg["scale"] * (0.4 if name == "resnet34" else 1.0)
+        model = zoo.build(name, scale=scale, input_size=cfg["size"])
+        with Timer() as t:
+            front = plan_front(model, cluster)
+        us = 1e6 * t.s
+        total_us += us
+        base = plan_with_spec(model.graph, cluster, model.input_size)
+        bm = plan_metrics(base.pipeline)
+        nondom = all(not dominates(p.metrics, q.metrics)
+                     for p in front.points for q in front.points
+                     if p is not q)
+        contains = any(
+            all(x <= y for x, y in zip(p.metrics.as_tuple(), bm.as_tuple()))
+            for p in front.points)
+        wins = _wins(front, bm)
+        all_ok = all_ok and nondom and contains and len(front) >= 2
+        total_wins += wins
+        rows.append(csv_row(
+            f"pareto.{name}", us,
+            f"points={len(front)};nondominated={1 if nondom else 0};"
+            f"contains_opt={1 if contains else 0};wins={wins}"))
+    rows.append(csv_row(
+        "pareto.summary", total_us,
+        f"front_ok={1.0 if all_ok else 0.0};wins={total_wins}"))
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Standalone entry point mirroring ``benchmarks.run``'s JSON shape
+    so ``tools/bench_gate.py`` can gate it:
+    ``python -m benchmarks.fig_pareto --smoke --out X.json``."""
+    import argparse
+    import json
+    import time
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    from .run import parse_metrics
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    rows = run(smoke=args.smoke)
+    wall = time.time() - t0
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump({"rows": rows, "metrics": parse_metrics(rows),
+                       "wall_s": wall,
+                       "mode": "smoke" if args.smoke else "full"},
+                      fh, indent=2, sort_keys=True)
+
+
+if __name__ == "__main__":
+    main()

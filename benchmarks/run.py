@@ -12,6 +12,7 @@ CSV rows (one per measurement), mirroring the paper's tables/figures:
   exec       eager tile loop vs compiled stage path     (repro.exec)
   serving    multi-tenant scheduler vs time-sliced      (repro.serving)
   fleet      planner throughput + plan registry         (repro.fleet)
+  pareto     multi-objective Pareto front sweep         (repro.plan_front)
 
 Use --fast to trim the slowest sweeps (full mode is the default for
 ``python -m benchmarks.run``).  --smoke runs a tiny-config subset for
@@ -93,7 +94,8 @@ def main() -> None:
     from . import (table4_partition, fig5_redundancy, fig12_piece_vs_block,
                    fig13_throughput, table5_hetero, fig15_memory,
                    table67_optimal, fig_runtime_adapt, fig_exec_backend,
-                   fig_serving_mt, fig_kernel_conv, fig_fleet_planner)
+                   fig_serving_mt, fig_kernel_conv, fig_fleet_planner,
+                   fig_pareto)
     benches = {
         "table4": lambda: table4_partition.run(),
         "fig5": lambda: fig5_redundancy.run(),
@@ -110,17 +112,20 @@ def main() -> None:
         "serving": lambda: fig_serving_mt.run(smoke=args.smoke or args.fast),
         "kernel": lambda: fig_kernel_conv.run(smoke=args.smoke or args.fast),
         "fleet": lambda: fig_fleet_planner.run(smoke=args.smoke or args.fast),
+        "pareto": lambda: fig_pareto.run(smoke=args.smoke or args.fast),
     }
     if args.smoke:
         # CI smoke: the exec-backend microbenchmark, the conv-kernel
         # autotune microbenchmark, the multi-tenant serving comparison,
-        # the fleet planner-throughput check, and the cheapest paper
-        # artifacts, all in tiny configs
+        # the fleet planner-throughput check, the multi-objective
+        # Pareto-front contract, and the cheapest paper artifacts, all
+        # in tiny configs
         smoke = {
             "exec": benches["exec"],
             "kernel": benches["kernel"],
             "serving": benches["serving"],
             "fleet": benches["fleet"],
+            "pareto": benches["pareto"],
             "table4": benches["table4"],
             "fig5": benches["fig5"],
             # >= 2x DROP_AFTER frames so the churn event actually fires

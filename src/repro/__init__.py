@@ -23,6 +23,10 @@ _LAZY = {
     "ExecSpec": ("repro.api.specs", "ExecSpec"),
     "DeploySpec": ("repro.api.specs", "DeploySpec"),
     "FleetSpec": ("repro.api.specs", "FleetSpec"),
+    "ObjectiveSpec": ("repro.api.specs", "ObjectiveSpec"),
+    "OBJECTIVE_PRESETS": ("repro.api.specs", "OBJECTIVE_PRESETS"),
+    "plan_front": ("repro.core.pareto", "plan_front"),
+    "ParetoFront": ("repro.core.pareto", "ParetoFront"),
     "PlanRegistry": ("repro.fleet.registry", "PlanRegistry"),
     "FleetRouter": ("repro.fleet.router", "FleetRouter"),
     "api": ("repro.api", None),
@@ -31,7 +35,8 @@ _LAZY = {
 }
 
 __all__ = ["compile", "Deployment", "PlanSpec", "ExecSpec", "DeploySpec",
-           "FleetSpec", "PlanRegistry", "FleetRouter", "api", "obs",
+           "FleetSpec", "ObjectiveSpec", "OBJECTIVE_PRESETS", "plan_front",
+           "ParetoFront", "PlanRegistry", "FleetRouter", "api", "obs",
            "fleet"]
 
 __getattr__, __dir__ = lazy_exports(__name__, globals(), _LAZY)

@@ -9,8 +9,8 @@ free of import cycles.
 """
 
 from ._compat import lazy_exports, reset_legacy_warnings
-from .specs import (SPEC_VERSION, DeploySpec, ExecSpec, FleetSpec,
-                    PlanSpec, spec_from_dict)
+from .specs import (OBJECTIVE_PRESETS, SPEC_VERSION, DeploySpec, ExecSpec,
+                    FleetSpec, ObjectiveSpec, PlanSpec, spec_from_dict)
 
 _LAZY = {
     "compile": ("repro.api.deployment", "compile"),
@@ -20,7 +20,7 @@ _LAZY = {
 }
 
 __all__ = ["PlanSpec", "ExecSpec", "DeploySpec", "FleetSpec",
-           "spec_from_dict",
+           "ObjectiveSpec", "OBJECTIVE_PRESETS", "spec_from_dict",
            "SPEC_VERSION", "SCHEMA_VERSION", "compile", "Deployment",
            "artifacts", "reset_legacy_warnings"]
 

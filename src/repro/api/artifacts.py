@@ -187,15 +187,21 @@ def pipeline_from_dict(d: Mapping) -> PipelinePlan:
 def plan_to_dict(pico: PicoPlan) -> dict:
     # "source" (scratch | incremental | registry) is an additive field:
     # pre-provenance artifacts load as "scratch", old loaders ignore it
-    return {"partition": partition_to_dict(pico.partition),
-            "pipeline": pipeline_to_dict(pico.pipeline),
-            "source": pico.source}
+    d = {"partition": partition_to_dict(pico.partition),
+         "pipeline": pipeline_to_dict(pico.pipeline),
+         "source": pico.source}
+    # objective label (additive, omitted while None so pre-objective
+    # plan documents stay byte-identical)
+    if pico.objective is not None:
+        d["objective"] = pico.objective
+    return d
 
 
 def plan_from_dict(d: Mapping) -> PicoPlan:
     return PicoPlan(partition_from_dict(d["partition"]),
                     pipeline_from_dict(d["pipeline"]),
-                    source=d.get("source", "scratch"))
+                    source=d.get("source", "scratch"),
+                    objective=d.get("objective"))
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +284,49 @@ def model_from_dict(d: Mapping):
 
 
 # ---------------------------------------------------------------------------
+# pareto front (multi-objective planner output)
+# ---------------------------------------------------------------------------
+
+def _plan_metrics_to_dict(m) -> dict:
+    return {"period": m.period, "latency": m.latency,
+            "energy_j": m.energy_j, "memory_bytes": m.memory_bytes}
+
+
+def _plan_metrics_from_dict(d: Mapping):
+    from ..core.simulate import PlanMetrics
+    return PlanMetrics(d["period"], d["latency"], d["energy_j"],
+                       d["memory_bytes"])
+
+
+def _front_point_to_dict(p) -> dict:
+    return {"plan": plan_to_dict(p.plan),
+            "metrics": _plan_metrics_to_dict(p.metrics),
+            "n_devices": p.n_devices, "t_lim": p.t_lim}
+
+
+def _front_point_from_dict(d: Mapping):
+    from ..core.pareto import FrontPoint
+    return FrontPoint(plan_from_dict(d["plan"]),
+                      _plan_metrics_from_dict(d["metrics"]),
+                      d["n_devices"], d.get("t_lim", float("inf")))
+
+
+def pareto_front_to_dict(front) -> dict:
+    """Serialize a :class:`~repro.core.pareto.ParetoFront`: the sweep's
+    :class:`~repro.api.specs.PlanSpec` plus every non-dominated point
+    (full plan + priced metrics + sweep coordinates)."""
+    return {"spec": front.spec.to_dict(),
+            "points": [_front_point_to_dict(p) for p in front.points]}
+
+
+def pareto_front_from_dict(d: Mapping):
+    from ..core.pareto import ParetoFront   # lazy: avoid import cycle
+    from .specs import PlanSpec
+    return ParetoFront([_front_point_from_dict(p) for p in d["points"]],
+                       PlanSpec.from_dict(d["spec"]))
+
+
+# ---------------------------------------------------------------------------
 # fleet plan registry
 # ---------------------------------------------------------------------------
 
@@ -304,6 +353,7 @@ _CODECS = {
     "cluster": (cluster_to_dict, cluster_from_dict),
     "model": (model_to_dict, model_from_dict),
     "plan_registry": (plan_registry_to_dict, plan_registry_from_dict),
+    "pareto_front": (pareto_front_to_dict, pareto_front_from_dict),
 }
 
 

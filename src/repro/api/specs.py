@@ -50,16 +50,36 @@ def decode_float(v):
     return v
 
 
+def _encode_deep(v):
+    """Recursive :func:`encode_float` (nested spec payloads carry their
+    own non-finite floats, e.g. an ``ObjectiveSpec`` inside a
+    ``PlanSpec``)."""
+    if isinstance(v, dict):
+        return {k: _encode_deep(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_encode_deep(x) for x in v]
+    return encode_float(v)
+
+
 class _SpecBase:
     """Shared (de)serialization for the frozen spec dataclasses."""
+
+    #: fields omitted from payloads while None — additive evolution:
+    #: documents written before the field existed stay byte-identical,
+    #: and so do every registry/artifact key derived from them.
+    _omit_if_none: tuple = ()
 
     def to_dict(self) -> dict:
         """Plain payload dict (raw float values — non-finite floats are
         spelled out only at JSON-encode time, by :meth:`to_json` or the
-        enclosing artifact encoder)."""
+        enclosing artifact encoder).  Nested specs become nested payload
+        dicts."""
         out = {"kind": type(self).__name__, "version": SPEC_VERSION}
         for f in dataclasses.fields(self):
-            out[f.name] = getattr(self, f.name)
+            v = getattr(self, f.name)
+            if v is None and f.name in self._omit_if_none:
+                continue
+            out[f.name] = v.to_dict() if isinstance(v, _SpecBase) else v
         return out
 
     @classmethod
@@ -79,12 +99,17 @@ class _SpecBase:
         unknown = set(d) - names
         if unknown:
             raise ValueError(f"unknown {cls.__name__} fields: {sorted(unknown)}")
-        return cls(**{k: decode_float(v) for k, v in d.items()})
+        vals = {}
+        for k, v in d.items():
+            if isinstance(v, dict) and v.get("kind") in SPEC_KINDS:
+                vals[k] = SPEC_KINDS[v["kind"]].from_dict(v)
+            else:
+                vals[k] = decode_float(v)
+        return cls(**vals)
 
     def to_json(self, **dump_kw) -> str:
         dump_kw.setdefault("sort_keys", True)
-        return json.dumps({k: encode_float(v)
-                           for k, v in self.to_dict().items()}, **dump_kw)
+        return json.dumps(_encode_deep(self.to_dict()), **dump_kw)
 
     @classmethod
     def from_json(cls, s: str) -> "_SpecBase":
@@ -95,6 +120,142 @@ class _SpecBase:
 
 
 @dataclass(frozen=True)
+class ObjectiveSpec(_SpecBase):
+    """Multi-objective planner scoring: weights + hard constraints over
+    throughput (pipeline period), end-to-end latency, steady-state
+    per-frame energy, and peak per-device memory.
+
+    The default instance is *pure throughput* — it reproduces the
+    single-objective planner bit-identically.  Weights are unit-free:
+    :meth:`score` normalizes each metric by a reference point (the
+    front's elementwise minimum in :meth:`~repro.core.pareto.
+    ParetoFront.select`) before weighting, so ``latency=1.0`` means
+    "one unit of relative latency costs as much as one unit of relative
+    period".  Constraints are absolute: seconds for ``max_latency_s``,
+    Joules/frame for ``max_energy_j``, bytes for ``max_memory_bytes``
+    (peak, per device).
+
+    Inside Algorithm 2, ``max_latency_s`` tightens ``t_lim``,
+    ``max_memory_bytes`` prunes stage candidates whose peak per-device
+    footprint (params + live features) exceeds the budget, and a
+    positive ``latency`` weight switches the DP comparison from
+    lexicographic (period, latency) to the weighted scalarization —
+    on both the scalar and the vectorized solver paths.  Energy is a
+    whole-plan quantity (idle power depends on the final period), so
+    its weight/constraint apply at plan scoring, not inside the DP.
+    """
+
+    throughput: float = 1.0
+    latency: float = 0.0
+    energy: float = 0.0
+    memory: float = 0.0
+    max_latency_s: float = float("inf")
+    max_energy_j: float = float("inf")
+    max_memory_bytes: float = float("inf")
+
+    def __post_init__(self):
+        weights = (self.throughput, self.latency, self.energy, self.memory)
+        for name, w in zip(("throughput", "latency", "energy", "memory"),
+                           weights):
+            if not (w >= 0 and math.isfinite(w)):
+                raise ValueError(f"{name} weight must be finite and >= 0, "
+                                 f"got {w}")
+        if not any(w > 0 for w in weights):
+            raise ValueError("at least one objective weight must be > 0")
+        for name in ("max_latency_s", "max_energy_j", "max_memory_bytes"):
+            if not getattr(self, name) > 0:
+                raise ValueError(f"{name} must be > 0, "
+                                 f"got {getattr(self, name)}")
+
+    # -- planner-facing views -------------------------------------------
+    @property
+    def is_throughput_only(self) -> bool:
+        """True for the default single-objective planner behavior."""
+        return (self.latency == 0 and self.energy == 0 and self.memory == 0
+                and not math.isfinite(self.max_latency_s)
+                and not math.isfinite(self.max_energy_j)
+                and not math.isfinite(self.max_memory_bytes))
+
+    @property
+    def shapes_dp(self) -> bool:
+        """Whether Algorithm 2's DP must deviate from the pure
+        throughput solver (latency enters the comparison, or stage
+        candidates are memory-pruned)."""
+        return self.latency > 0 or math.isfinite(self.max_memory_bytes)
+
+    def dp_signature(self) -> tuple:
+        """The part of the objective a solved DP table depends on
+        (``max_latency_s`` folds into ``t_lim`` upstream)."""
+        return (self.throughput, self.latency, self.max_memory_bytes)
+
+    def relaxed(self) -> "ObjectiveSpec":
+        """Constraints dropped, weights kept — the best-effort fallback
+        target when the constrained problem is infeasible."""
+        return self.replace(max_latency_s=float("inf"),
+                            max_energy_j=float("inf"),
+                            max_memory_bytes=float("inf"))
+
+    # -- plan scoring ---------------------------------------------------
+    def feasible(self, metrics) -> bool:
+        """Whether a plan's metrics satisfy every hard constraint."""
+        return (metrics.latency <= self.max_latency_s
+                and metrics.energy_j <= self.max_energy_j
+                and metrics.memory_bytes <= self.max_memory_bytes)
+
+    def score(self, metrics, ref=None) -> float:
+        """Weighted scalarization of a plan's metrics (lower is better).
+
+        ``metrics``/``ref`` carry ``period``/``latency``/``energy_j``/
+        ``memory_bytes``; with ``ref`` each term is normalized by the
+        reference value so the weights compare like-for-like.
+        """
+        def norm(v, r):
+            return v / r if (r is not None and r > 0) else v
+        r = ref
+        return (self.throughput * norm(metrics.period,
+                                       r.period if r else None)
+                + self.latency * norm(metrics.latency,
+                                      r.latency if r else None)
+                + self.energy * norm(metrics.energy_j,
+                                     r.energy_j if r else None)
+                + self.memory * norm(metrics.memory_bytes,
+                                     r.memory_bytes if r else None))
+
+    def label(self) -> str:
+        """Preset name when this spec equals one, else ``"custom"`` —
+        the human-readable provenance carried on plans it selects."""
+        for name, preset in OBJECTIVE_PRESETS.items():
+            if preset == self:
+                return name
+        return "custom"
+
+    @classmethod
+    def named(cls, name: str) -> "ObjectiveSpec":
+        """Look up a preset objective (``throughput`` / ``latency`` /
+        ``battery`` / ``memory`` / ``balanced``)."""
+        try:
+            return OBJECTIVE_PRESETS[name]
+        except KeyError:
+            raise ValueError(f"unknown objective {name!r}; presets: "
+                             f"{sorted(OBJECTIVE_PRESETS)}") from None
+
+
+#: Named deployment profiles: ``throughput`` is the paper's planner;
+#: ``latency`` favors short end-to-end frames (interactive SLOs);
+#: ``battery`` favors low per-frame energy (edge fleets on battery);
+#: ``memory`` favors small peak per-device footprints; ``balanced``
+#: weighs all four equally.
+OBJECTIVE_PRESETS = {
+    "throughput": ObjectiveSpec(),
+    "latency": ObjectiveSpec(throughput=0.1, latency=1.0),
+    "battery": ObjectiveSpec(throughput=0.1, energy=1.0),
+    "memory": ObjectiveSpec(throughput=0.1, memory=1.0),
+    "balanced": ObjectiveSpec(throughput=1.0, latency=1.0, energy=1.0,
+                              memory=1.0),
+}
+
+
+@dataclass(frozen=True)
 class PlanSpec(_SpecBase):
     """Offline-planner configuration (Algorithm 1 + 2 + 3 knobs).
 
@@ -102,12 +263,19 @@ class PlanSpec(_SpecBase):
     defers to ``max(2, len(cluster))`` at plan time.  Graphs with more
     than ``dnc_threshold`` vertices use the divide-and-conquer
     partitioner.  ``t_lim`` is the paper's soft latency budget.
+    ``objective`` makes the planner multi-objective
+    (:class:`ObjectiveSpec`); ``None`` is the legacy pure-throughput
+    planner, and is omitted from payloads so pre-objective documents —
+    and every registry key derived from them — stay byte-identical.
     """
 
     t_lim: float = float("inf")
     max_diameter: int = 5
     n_split: int | None = None
     dnc_threshold: int = 120
+    objective: ObjectiveSpec | None = None
+
+    _omit_if_none = ("objective",)
 
     def __post_init__(self):
         if not self.t_lim > 0:
@@ -121,6 +289,10 @@ class PlanSpec(_SpecBase):
         if self.dnc_threshold < 1:
             raise ValueError(f"dnc_threshold must be >= 1, "
                              f"got {self.dnc_threshold}")
+        if self.objective is not None and \
+                not isinstance(self.objective, ObjectiveSpec):
+            raise ValueError(f"objective must be None or an ObjectiveSpec, "
+                             f"got {type(self.objective).__name__}")
 
     def resolve_n_split(self, n_devices: int) -> int:
         return self.n_split or max(2, n_devices)
@@ -197,6 +369,12 @@ class DeploySpec(_SpecBase):
 
     The default is *ideal* — no jitter, no noise, free inter-stage
     hand-off — which reproduces ``core.simulate`` exactly.
+
+    ``objective`` names the :data:`OBJECTIVE_PRESETS` profile this
+    deployment optimizes for; :meth:`~repro.core.pareto.ParetoFront.
+    deployment` uses it to pick the Pareto-front point to ship, and the
+    chosen plan carries the name as provenance
+    (``PicoPlan.objective``).  ``None`` means unspecified (throughput).
     """
 
     seed: int = 0
@@ -214,8 +392,16 @@ class DeploySpec(_SpecBase):
     migration_bandwidth: float | None = None
     trace: bool = False         # record repro.obs spans during runs
     metrics: bool = True        # publish runtime metrics (repro.obs)
+    objective: str | None = None  # OBJECTIVE_PRESETS profile to deploy
+
+    _omit_if_none = ("objective",)
 
     def __post_init__(self):
+        if self.objective is not None and \
+                self.objective not in OBJECTIVE_PRESETS:
+            raise ValueError(f"objective must be None or one of "
+                             f"{sorted(OBJECTIVE_PRESETS)}, "
+                             f"got {self.objective!r}")
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         for name in ("compute_noise", "link_latency_s", "link_jitter_s",
@@ -305,7 +491,8 @@ class FleetSpec(_SpecBase):
 
 
 SPEC_KINDS = {cls.__name__: cls
-              for cls in (PlanSpec, ExecSpec, DeploySpec, FleetSpec)}
+              for cls in (ObjectiveSpec, PlanSpec, ExecSpec, DeploySpec,
+                          FleetSpec)}
 
 
 def spec_from_dict(d: dict):

@@ -13,7 +13,9 @@ from .hetero import adjust_stages
 from .planner import (PicoPlan, plan, plan_with_spec, replan, recost,
                       partition_cluster, split_devices, ClusterPartition,
                       TenantShare)
-from .simulate import simulate, SimReport, DeviceReport
+from .simulate import (simulate, SimReport, DeviceReport, PlanMetrics,
+                       plan_metrics)
+from .pareto import FrontPoint, ParetoFront, dominates, plan_front
 from . import baselines
 
 __all__ = [
@@ -30,5 +32,7 @@ __all__ = [
     "partition_cluster", "split_devices", "ClusterPartition", "TenantShare",
     "simulate",
     "SimReport",
-    "DeviceReport", "baselines",
+    "DeviceReport", "PlanMetrics", "plan_metrics",
+    "FrontPoint", "ParetoFront", "dominates", "plan_front",
+    "baselines",
 ]

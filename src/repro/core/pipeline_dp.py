@@ -102,6 +102,7 @@ class PlannerCache:
         self.sig = None
         self.segments: dict[tuple[int, int, int], "SegmentCost"] = {}
         self.max_flops: dict[tuple[int, int, int], float] = {}
+        self.mem: dict[tuple[int, int, int], float] = {}
         self.comm: dict[tuple, float] = {}
         self.nodes: dict[tuple[int, int], frozenset] = {}
         self.solutions: dict[tuple, tuple] = {}
@@ -115,6 +116,7 @@ class PlannerCache:
     def clear(self) -> None:
         self.segments.clear()
         self.max_flops.clear()
+        self.mem.clear()
         self.comm.clear()
         self.nodes.clear()
         self.solutions.clear()
@@ -150,6 +152,17 @@ class PipelineDP:
     numpy-vectorized over all split ranges, and an unchanged homogenized
     signature reuses the solved DP table outright.  Plans from the two
     paths are bit-identical (same arithmetic, same tie-breaking).
+
+    ``objective`` (an :class:`~repro.api.specs.ObjectiveSpec`) makes the
+    DP multi-objective-aware on both paths: a finite
+    ``max_memory_bytes`` prunes stage candidates whose peak per-device
+    footprint exceeds the budget (computed from the same cached segment
+    geometry, so the vectorized path stays hot), and a positive
+    ``latency`` weight replaces the lexicographic (period, latency)
+    comparison with the weighted scalarization.  An objective that does
+    not shape the DP (the pure-throughput default) is normalized to
+    ``None``, keeping the legacy paths — and their bit-identity pins —
+    untouched.
     """
 
     def __init__(
@@ -161,6 +174,7 @@ class PipelineDP:
         t_lim: float = float("inf"),
         cost_table: CostTable | None = None,
         cache: PlannerCache | None = None,
+        objective=None,
     ):
         self.g = g
         self.pieces = list(pieces)
@@ -169,6 +183,8 @@ class PipelineDP:
         self.t_lim = t_lim
         self.cost_table = cost_table
         self.cache = cache
+        self.objective = (objective if objective is not None
+                          and objective.shapes_dp else None)
         if cache is not None:
             cache.ensure(PlannerCache.chain_signature(g, self.pieces,
                                                       input_size))
@@ -216,8 +232,37 @@ class PipelineDP:
             self._stage_cache[key] = hit
         return hit
 
+    def _stage_mem(self, i: int, j: int, m: int) -> float:
+        """Peak per-device memory of one stage state: segment params +
+        the largest halo-extended live-feature footprint.  Pure geometry
+        (device-independent), so it persists in the PlannerCache."""
+        key = (i, j, m)
+        if self.cache is not None:
+            v = self.cache.mem.get(key)
+            if v is not None:
+                return v
+        seg = self._segment(i, j, m)
+        v = seg.param_bytes + (max(seg.feature_bytes)
+                               if seg.feature_bytes else 0.0)
+        if self.cache is not None:
+            self.cache.mem[key] = v
+        return v
+
+    def _mem_ok(self, i: int, j: int, m: int) -> bool:
+        if self.objective is None:
+            return True
+        return self._stage_mem(i, j, m) <= self.objective.max_memory_bytes
+
+    def _obj_key(self, per: float, lat: float) -> tuple:
+        """Comparison key under the scalarized objective (ties broken
+        exactly like the pure-throughput solver: period, then latency)."""
+        o = self.objective
+        return (o.throughput * per + o.latency * lat, per, lat)
+
     def solve(self, i: int, j: int, p: int) -> tuple[float, float]:
         """Returns (period, latency) for pieces i..j with p devices."""
+        if self.objective is not None:
+            return self._solve_obj(i, j, p)
         key = (i, j, p)
         if key in self.memo:
             per, lat, _ = self.memo[key]
@@ -246,6 +291,43 @@ class PipelineDP:
         self.memo[key] = best
         return best[0], best[1]
 
+    def _solve_obj(self, i: int, j: int, p: int) -> tuple[float, float]:
+        """Objective-aware scalar solver: memory-pruned stage
+        candidates, scalarized comparison.  Mirrors the vectorized
+        path's selection order exactly (option A first, then earliest
+        (s, m) in s-major/m-minor order)."""
+        inf = float("inf")
+        key = (i, j, p)
+        if key in self.memo:
+            per, lat, _ = self.memo[key]
+            return per, lat
+        sc = self.stage(i, j, p)
+        if sc.total <= self.t_lim and self._mem_ok(i, j, p):
+            best = (sc.total, sc.total, None)
+        else:
+            best = (inf, sc.total, None)
+        best_key = (self._obj_key(*best[:2]) if best[0] < inf
+                    else (inf, inf, inf))
+        if p > 1 and j > i:
+            for s in range(i, j):
+                for m in range(1, p):
+                    if not self._mem_ok(s + 1, j, m):
+                        continue
+                    tail = self.stage(s + 1, j, m).total
+                    head_p, head_l = self._solve_obj(i, s, p - m)
+                    lat = head_l + tail
+                    if lat > self.t_lim:
+                        continue
+                    per = max(head_p, tail)
+                    if per == inf:       # infeasible head: not a candidate
+                        continue
+                    cand_key = self._obj_key(per, lat)
+                    if cand_key < best_key:
+                        best = (per, lat, (s, m))
+                        best_key = cand_key
+        self.memo[key] = best
+        return best[0], best[1]
+
     def build(self) -> PipelinePlan:
         if self.cache is not None:
             usig = self._uniform_sig()
@@ -263,7 +345,10 @@ class PipelineDP:
             fallback = PipelineDP(self.g, self.pieces, self.cluster,
                                   self.input_size,
                                   cost_table=self.cost_table,
-                                  cache=self.cache).build()
+                                  cache=self.cache,
+                                  objective=(self.objective.relaxed()
+                                             if self.objective is not None
+                                             else None)).build()
             fallback.feasible = False
             fallback.wall_time_s += time.perf_counter() - t0
             return fallback
@@ -343,8 +428,16 @@ class PipelineDP:
         (j, p); tails Ts(s+1, j, m) are priced in batch from cached
         segment geometry.  Tie-breaking replicates the scalar solver:
         lexicographic (period, latency), single-stage option first, then
-        earliest (s, m) in s-major/m-minor order."""
+        earliest (s, m) in s-major/m-minor order.  Under an objective,
+        memory-violating stage states are masked to inf (so both option
+        A and tails drop out through the ordinary feasibility machinery)
+        and the selection key becomes the weighted scalarization with
+        the same (period, latency, first-index) tie-breaking."""
         inf = float("inf")
+        obj = self.objective
+        mem_lim = (obj.max_memory_bytes
+                   if obj is not None and np.isfinite(obj.max_memory_bytes)
+                   else None)
         # TT[a, j, m] = stage total for pieces a..j on m devices.
         # a == 0 serves option A (m up to D); a >= 1 serves tails (m < D).
         TT = np.full((L, L, D + 1), inf)
@@ -363,6 +456,10 @@ class PipelineDP:
                 # (max over identical devices commutes with the positive
                 # scaling, so max_flops stands in for max(per-device comp))
                 TT[a, j, 1:mmax + 1] = ((alpha * max_f) / cap) * ratio + comm
+                if mem_lim is not None:
+                    for m in range(1, mmax + 1):
+                        if self._stage_mem(a, j, m) > mem_lim:
+                            TT[a, j, m] = inf
 
         t_lim = self.t_lim
         P = np.full((L, D + 1), inf)
@@ -386,7 +483,7 @@ class PipelineDP:
                     cand_per = np.maximum(heads_per, tails)
                     cand_lat = heads_lat + tails
                     valid = cand_lat <= t_lim
-                    if valid.any():
+                    if valid.any() and obj is None:
                         per_m = np.where(valid, cand_per, inf)
                         lat_m = np.where(valid, cand_lat, inf)
                         min_per = per_m.min()
@@ -399,6 +496,39 @@ class PipelineDP:
                             s_idx, c_idx = divmod(first, p - 1)
                             best_per, best_lat = min_per, min_lat
                             bs, bm = s_idx, c_idx + 1
+                    elif valid.any():
+                        # scalarized selection: min weighted score, ties
+                        # broken per -> lat -> first (s, m) index, exactly
+                        # like _solve_obj.  Infeasible candidates carry
+                        # inf (a zero weight would turn 0*inf into NaN,
+                        # and inf <= t_lim holds for an unbounded t_lim),
+                        # so mask them out of the score entirely.
+                        w_t, w_l = obj.throughput, obj.latency
+                        valid &= np.isfinite(cand_per)
+                        per_m = np.where(valid, cand_per, inf)
+                        lat_m = np.where(valid, cand_lat, inf)
+                        score_m = np.where(
+                            valid,
+                            w_t * np.where(valid, cand_per, 0.0)
+                            + w_l * np.where(valid, cand_lat, 0.0),
+                            inf)
+                        min_score = score_m.min()
+                        if min_score < inf:
+                            sel = score_m == min_score
+                            min_per = np.where(sel, per_m, inf).min()
+                            sel &= per_m == min_per
+                            min_lat = np.where(sel, lat_m, inf).min()
+                            sel &= lat_m == min_lat
+                            if best_per < inf:
+                                best_key = (w_t * best_per + w_l * best_lat,
+                                            best_per, best_lat)
+                            else:
+                                best_key = (inf, inf, inf)
+                            if (min_score, min_per, min_lat) < best_key:
+                                first = int(np.argmax(sel))
+                                s_idx, c_idx = divmod(first, p - 1)
+                                best_per, best_lat = min_per, min_lat
+                                bs, bm = s_idx, c_idx + 1
                 P[j, p] = best_per
                 Lat[j, p] = best_lat
                 S[j, p] = bs
@@ -409,7 +539,9 @@ class PipelineDP:
         t0 = time.perf_counter()
         L, D = len(self.pieces), len(self.cluster)
         cap, alpha, bw = usig
-        key = (L, D, cap, alpha, bw, self.t_lim, self._ratio_sig())
+        key = (L, D, cap, alpha, bw, self.t_lim, self._ratio_sig(),
+               None if self.objective is None
+               else self.objective.dp_signature())
         sol = self.cache.solutions.get(key)
         if sol is None:
             sol = self._solve_fast(L, D, cap, alpha, bw)
@@ -422,7 +554,10 @@ class PipelineDP:
             fallback = PipelineDP(self.g, self.pieces, self.cluster,
                                   self.input_size,
                                   cost_table=self.cost_table,
-                                  cache=self.cache).build()
+                                  cache=self.cache,
+                                  objective=(self.objective.relaxed()
+                                             if self.objective is not None
+                                             else None)).build()
             fallback.feasible = False
             fallback.wall_time_s += time.perf_counter() - t0
             return fallback
@@ -457,6 +592,8 @@ def plan_pipeline(
     t_lim: float = float("inf"),
     cost_table: CostTable | None = None,
     cache: PlannerCache | None = None,
+    objective=None,
 ) -> PipelinePlan:
     return PipelineDP(g, pieces, cluster, input_size, t_lim,
-                      cost_table=cost_table, cache=cache).build()
+                      cost_table=cost_table, cache=cache,
+                      objective=objective).build()

@@ -36,11 +36,18 @@ class PicoPlan:
     partition: PartitionResult
     pipeline: PipelinePlan
     source: str = "scratch"
+    # objective provenance: the ObjectiveSpec label this plan was scored
+    # under (None = legacy pure-throughput planning).  Rides through the
+    # plan artifact codec and Deployment.describe().
+    objective: str | None = None
 
     def __post_init__(self):
         if self.source not in PLAN_SOURCES:
             raise ValueError(f"source must be one of {PLAN_SOURCES}, "
                              f"got {self.source!r}")
+        if self.objective is not None and not isinstance(self.objective, str):
+            raise ValueError("objective must be None or a label string, "
+                             f"got {self.objective!r}")
 
     @property
     def period(self) -> float:
@@ -85,8 +92,20 @@ def plan_with_spec(
     turns Algorithm 2 into the incremental hot path: segment geometry
     survives device churn, and the resulting plan's ``source`` is
     ``"incremental"`` whenever cached work was actually reused.
+
+    ``spec.objective`` (an :class:`~repro.api.specs.ObjectiveSpec`)
+    makes the DP score candidates by the weighted multi-objective
+    scalarization and enforce its hard constraints: a finite
+    ``max_latency_s`` tightens ``t_lim``, a finite ``max_memory_bytes``
+    prunes memory-violating stage shapes inside the DP.  The default
+    (``None`` / pure-throughput) leaves planning bit-identical to the
+    legacy single-objective path.
     """
     spec = spec or PlanSpec()
+    obj = spec.objective
+    t_lim = spec.t_lim
+    if obj is not None:
+        t_lim = min(t_lim, obj.max_latency_s)
     with obs_trace.current().wall_span(
             "plan", n_devices=len(cluster), n_layers=len(g.layers),
             reuse_partition=partition is not None or pieces is not None,
@@ -114,13 +133,15 @@ def plan_with_spec(
                 and planner_cache.sig == PlannerCache.chain_signature(
                     g, part.pieces, input_size))
         homo = cluster.homogenized()
-        dp = PipelineDP(g, part.pieces, homo, input_size, spec.t_lim,
-                        cost_table=cost_table, cache=planner_cache)
+        dp = PipelineDP(g, part.pieces, homo, input_size, t_lim,
+                        cost_table=cost_table, cache=planner_cache,
+                        objective=obj)
         homo_plan = dp.build()
         final = adjust_stages(homo_plan, cluster, g, input_size,
                               cost_table=cost_table)
     return PicoPlan(part, final,
-                    source="incremental" if warm else "scratch")
+                    source="incremental" if warm else "scratch",
+                    objective=obj.label() if obj is not None else None)
 
 
 def plan(

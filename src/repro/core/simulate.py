@@ -52,6 +52,50 @@ class SimReport:
         return sum(d.energy_j for d in self.devices)
 
 
+@dataclass(frozen=True)
+class PlanMetrics:
+    """Steady-state per-frame metrics of one plan — the four axes the
+    multi-objective planner trades (:mod:`repro.core.pareto`).
+
+    ``period`` and ``latency`` come straight off the plan;
+    ``energy_j`` is the steady-state per-frame energy (the
+    ``frames -> inf`` limit of :func:`simulate`'s energy accounting:
+    every device pays active power while busy and idle power for the
+    rest of each period); ``memory_bytes`` is the peak per-device
+    footprint (params + live features, the same quantity
+    ``DeviceReport.memory_bytes`` reports).
+    """
+
+    period: float
+    latency: float
+    energy_j: float
+    memory_bytes: float
+
+    def as_tuple(self) -> tuple[float, float, float, float]:
+        """(period, latency, energy_j, memory_bytes) — all minimized."""
+        return (self.period, self.latency, self.energy_j, self.memory_bytes)
+
+
+def plan_metrics(plan: PipelinePlan) -> PlanMetrics:
+    """Simulate-derived :class:`PlanMetrics` for a priced plan.
+
+    Exact closed form of the steady state :func:`simulate` converges
+    to: per frame, device ``k`` of a stage is busy ``per_device_comp[k]``
+    seconds and idle for the remainder of the pipeline period.
+    """
+    period = plan.period
+    energy = 0.0
+    memory = 0.0
+    for st in plan.stages:
+        seg = st.cost.seg
+        for k, dev in enumerate(st.devices):
+            busy = st.cost.per_device_comp[k]
+            energy += (dev.active_power * busy
+                       + dev.idle_power * max(0.0, period - busy))
+            memory = max(memory, seg.param_bytes + seg.feature_bytes[k])
+    return PlanMetrics(period, plan.latency, energy, memory)
+
+
 def simulate(plan: PipelinePlan, frames: int = 64,
              cluster: Cluster | None = None) -> SimReport:
     S = len(plan.stages)

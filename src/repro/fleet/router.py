@@ -93,7 +93,12 @@ class FleetRouter:
         self.cells: dict[str, Cell] = {name: Cell(name, c)
                                        for name, c in clusters.items()}
         self.plans: dict[str, PicoPlan] = {}      # tenant name -> plan
-        self._rr = 0                              # round-robin cursor
+        # round-robin cursor: the last cell *name* served.  Keying on
+        # the name (not an integer index into sorted(cells)) keeps the
+        # rotation stable across add_cell/remove_cell — an index would
+        # silently land on a different cell once the sorted sequence
+        # shifts, skewing or repeating placements.
+        self._rr_last: str | None = None
 
     # -- load signal ----------------------------------------------------
     def observe(self, cell: str, utilization: float) -> float:
@@ -107,7 +112,11 @@ class FleetRouter:
 
     def _demand_load(self, cell: Cell) -> float:
         """Static fallback load when no utilization was observed yet:
-        admitted tenant weight per unit capacity, fleet-normalized."""
+        admitted tenant weight per unit capacity, fleet-normalized.
+        A degraded/empty cell (zero capacity) is infinitely loaded —
+        never a routing target, never a ZeroDivisionError."""
+        if cell.capacity <= 0:
+            return float("inf")
         total_cap = sum(c.capacity for c in self.cells.values())
         scale = total_cap / len(self.cells)
         return sum(t.weight for t in cell.tenants) / (cell.capacity / scale)
@@ -118,10 +127,23 @@ class FleetRouter:
 
     # -- routing --------------------------------------------------------
     def _pick(self, tenant: Tenant) -> Cell:
-        names = sorted(self.cells)
+        # zero-capacity cells (degraded/empty clusters) are not routable:
+        # they cannot host a plan, and pricing one divides by capacity
+        names = [n for n in sorted(self.cells)
+                 if self.cells[n].capacity > 0]
+        if not names:
+            raise ValueError(
+                f"no routable cell for tenant {tenant.name!r}: all "
+                f"{len(self.cells)} cell(s) have zero capacity")
         if self.spec.routing == "round_robin":
-            name = names[self._rr % len(names)]
-            self._rr += 1
+            # resume after the last *name* served (wrapping), so the
+            # rotation survives topology changes
+            if self._rr_last is None:
+                name = names[0]
+            else:
+                name = next((n for n in names if n > self._rr_last),
+                            names[0])
+            self._rr_last = name
             return self.cells[name]
         # least_loaded: smoothed load, capacity-normalized; name breaks ties
         return self.cells[min(names, key=lambda n: (self.cell_load(n), n))]
@@ -160,11 +182,22 @@ class FleetRouter:
         cell = self.cells[cell_name]
         cell.cluster = cluster
         replanned = {}
-        for t in cell.tenants:
-            plan = self.registry.get_or_plan(t.model, cluster, t.spec,
-                                             cost_table=self.cost_table)
-            self.plans[t.name] = plan
-            replanned[t.name] = plan
+        # same observability contract as admit: one fleet.route span per
+        # re-planned tenant (policy="churn") and a plan-source counter,
+        # so repartition audits see churn-driven plans too
+        with obs_trace.current().wall_span(
+                "fleet.churn", cell=cell_name, tenants=len(cell.tenants)):
+            for t in cell.tenants:
+                with obs_trace.current().wall_span(
+                        "fleet.route", tenant=t.name, cell=cell_name,
+                        policy="churn"):
+                    plan = self.registry.get_or_plan(
+                        t.model, cluster, t.spec,
+                        cost_table=self.cost_table)
+                    self.plans[t.name] = plan
+                    replanned[t.name] = plan
+                    self._metrics.counter("fleet.replans",
+                                          source=plan.source).inc()
         return replanned
 
     def add_cell(self, name: str, cluster: Cluster) -> Cell:

@@ -203,6 +203,77 @@ def test_router_round_robin_and_registry_hits():
         ["scratch", "registry", "registry", "registry"]
 
 
+def test_router_round_robin_survives_topology_change():
+    """Regression: the cursor used to be an integer index into
+    sorted(cells), so add_cell/remove_cell shifted which cell it landed
+    on (repeating or skipping cells).  Keyed on the last-served *name*,
+    the rotation resumes fairly after any topology change."""
+    r = _router(routing="round_robin")
+    assert [r.admit(Tenant(f"t{i}", _MODELS[0])).cell
+            for i in range(2)] == ["a", "b"]
+    # "ab" sorts between the existing cells; the old index-based cursor
+    # would now serve "b" twice in a row
+    r.add_cell("ab", _renamed(make_pi_cluster([1.5, 1.2, 1.0, 0.8]), "ab"))
+    assert [r.admit(Tenant(f"u{i}", _MODELS[0])).cell
+            for i in range(4)] == ["a", "ab", "b", "a"]
+    # removing the last-served cell: rotation continues from its name
+    # ("a" held t0/u0/u3; they re-admit round-robin as ab, b, ab)
+    moved = r.remove_cell("a")
+    assert [m.cell for m in moved] == ["ab", "b", "ab"]
+    assert r.admit(Tenant("v0", _MODELS[0])).cell == "b"
+
+
+def test_router_zero_capacity_cell_routed_around():
+    """A degraded cell (zero total capacity) must never be a routing
+    target — and must not crash load accounting with a
+    ZeroDivisionError."""
+    from repro.core import Device
+    dead = Cluster([Device("dead0", 0.0)], bandwidth=50e6 / 8)
+    cells = {"a": make_pi_cluster([1.5, 1.2, 1.0, 0.8]), "z": dead}
+    r = FleetRouter(cells, spec=FleetSpec(), metrics=MetricsRegistry())
+    assert r.cell_load("z") == float("inf")
+    for i in range(3):
+        assert r.admit(Tenant(f"t{i}", _MODELS[0])).cell == "a"
+    # round_robin skips it too
+    rr = FleetRouter({"a": make_pi_cluster([1.5, 1.2, 1.0, 0.8]),
+                      "b": _renamed(make_pi_cluster([1.5, 1.2, 1.0, 0.8]),
+                                    "b"),
+                      "z": dead},
+                     spec=FleetSpec(routing="round_robin"),
+                     metrics=MetricsRegistry())
+    assert [rr.admit(Tenant(f"t{i}", _MODELS[0])).cell
+            for i in range(4)] == ["a", "b", "a", "b"]
+    # a fleet with no routable cell fails loudly, not with a crash
+    only_dead = FleetRouter({"z": dead}, metrics=MetricsRegistry())
+    with pytest.raises(ValueError, match="zero capacity"):
+        only_dead.admit(Tenant("t9", _MODELS[0]))
+
+
+def test_router_churn_emits_spans_and_counters():
+    """Regression: churn used to re-plan silently while admit emitted
+    fleet.route spans and plan-source counters — repartition audits
+    could not see churn-driven plans."""
+    from repro.obs import Tracer
+    from repro.obs import trace as obs_trace
+    reg = MetricsRegistry()
+    cells = {"a": make_pi_cluster([1.5, 1.2, 1.0, 0.8])}
+    r = FleetRouter(cells, spec=FleetSpec(), metrics=reg)
+    r.admit(Tenant("t0", _MODELS[0]))
+    tr = Tracer()
+    with obs_trace.scoped(tr):
+        replanned = r.churn("a", cells["a"].restricted(
+            cells["a"].devices[:-1]))
+    assert replanned["t0"].source == "incremental"
+    churn_spans = [s for s in tr.spans if s.name == "fleet.churn"]
+    route_spans = [s for s in tr.spans if s.name == "fleet.route"]
+    assert len(churn_spans) == 1
+    assert churn_spans[0].attr("cell") == "a"
+    assert len(route_spans) == 1
+    assert route_spans[0].attr("policy") == "churn"
+    assert route_spans[0].attr("tenant") == "t0"
+    assert reg.value("fleet.replans", source="incremental") == 1.0
+
+
 def test_router_churn_is_incremental():
     r = _router()
     r.admit(Tenant("t0", _MODELS[0]))

@@ -1,0 +1,264 @@
+"""Multi-objective planner: ObjectiveSpec validation, Pareto front
+properties (mutual non-domination, contains the throughput optimum),
+artifact round-trips, objective-aware DP bit-identity between the
+scalar and vectorized solvers, and registry-key separation."""
+
+import json
+
+import pytest
+
+from repro.api import PlanSpec
+from repro.api.specs import OBJECTIVE_PRESETS, ObjectiveSpec, spec_from_dict
+from repro.core import make_pi_cluster, plan_front, plan_metrics
+from repro.core.pareto import ParetoFront, dominates
+from repro.core.pipeline_dp import PlannerCache
+from repro.core.planner import plan_with_spec
+from repro.fleet import PlanRegistry
+from repro.models.cnn import zoo
+from repro.obs.metrics import MetricsRegistry
+
+_MODELS = [
+    zoo.vgg16(input_size=(64, 64), scale=0.25),
+    zoo.squeezenet(input_size=(64, 64), scale=0.25),
+    zoo.resnet34(input_size=(64, 64), scale=0.1),
+]
+
+
+def _cluster():
+    return make_pi_cluster([1.5, 1.2, 1.0, 0.8])
+
+
+def _stage_sig(p):
+    return tuple((s.first_piece, s.last_piece, s.n_devices,
+                  tuple(s.fractions)) for s in p.pipeline.stages)
+
+
+# ---------------------------------------------------------------------------
+# ObjectiveSpec
+# ---------------------------------------------------------------------------
+
+def test_objective_spec_validation():
+    ObjectiveSpec()                                      # default is valid
+    for bad in (dict(throughput=-1.0), dict(latency=float("inf")),
+                dict(energy=float("nan")),
+                dict(throughput=0, latency=0, energy=0, memory=0),
+                dict(max_latency_s=0.0), dict(max_memory_bytes=-1.0)):
+        with pytest.raises(ValueError):
+            ObjectiveSpec(**bad)
+    with pytest.raises(ValueError):
+        ObjectiveSpec.named("speed")
+    with pytest.raises(ValueError):
+        PlanSpec(objective="battery")        # must be a spec, not a name
+
+
+def test_objective_spec_views_and_round_trip():
+    assert ObjectiveSpec().is_throughput_only
+    assert not ObjectiveSpec().shapes_dp
+    assert ObjectiveSpec(latency=1.0).shapes_dp
+    assert ObjectiveSpec(max_memory_bytes=1e6).shapes_dp
+    # energy weight alone does not shape the DP (whole-plan quantity)
+    assert not ObjectiveSpec(energy=1.0).shapes_dp
+    for name, preset in OBJECTIVE_PRESETS.items():
+        assert preset.label() == name
+        assert ObjectiveSpec.named(name) == preset
+        again = spec_from_dict(json.loads(preset.to_json()))
+        assert again == preset
+    relaxed = ObjectiveSpec(latency=1.0, max_memory_bytes=1e6).relaxed()
+    assert relaxed.latency == 1.0
+    assert relaxed.max_memory_bytes == float("inf")
+
+
+def test_plan_spec_objective_payload_is_additive():
+    """A None objective is omitted: pre-objective payloads (and every
+    registry key derived from them) stay byte-identical."""
+    assert "objective" not in PlanSpec().to_dict()
+    assert "objective" not in json.loads(PlanSpec().to_json())
+    ps = PlanSpec(objective=OBJECTIVE_PRESETS["battery"])
+    again = spec_from_dict(json.loads(ps.to_json()))
+    assert again == ps and again.objective == OBJECTIVE_PRESETS["battery"]
+
+
+# ---------------------------------------------------------------------------
+# default-objective bit-identity pin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", _MODELS, ids=lambda m: m.name)
+def test_throughput_objective_is_bit_identical_to_default(model):
+    cl = _cluster()
+    base = plan_with_spec(model.graph, cl, model.input_size)
+    obj = plan_with_spec(model.graph, cl, model.input_size,
+                         PlanSpec(objective=ObjectiveSpec()))
+    assert (base.period, base.latency) == (obj.period, obj.latency)
+    assert _stage_sig(base) == _stage_sig(obj)
+    assert base.objective is None
+    assert obj.objective == "throughput"
+
+
+@pytest.mark.parametrize("model", _MODELS, ids=lambda m: m.name)
+def test_objective_dp_scalar_equals_vectorized(model):
+    """The objective-aware DP keeps the scalar/vectorized bit-identity
+    pin: same period, latency, and stage shapes on both paths."""
+    cl = _cluster()
+    base_mem = plan_metrics(
+        plan_with_spec(model.graph, cl, model.input_size).pipeline
+    ).memory_bytes
+    for obj in (ObjectiveSpec(throughput=1.0, latency=2.0),
+                ObjectiveSpec(max_memory_bytes=base_mem * 0.9),
+                ObjectiveSpec(throughput=0.0, latency=1.0),
+                ObjectiveSpec(throughput=1.0, latency=0.5,
+                              max_memory_bytes=base_mem * 0.95)):
+        spec = PlanSpec(objective=obj)
+        scalar = plan_with_spec(model.graph, cl, model.input_size, spec)
+        fast = plan_with_spec(model.graph, cl, model.input_size, spec,
+                              planner_cache=PlannerCache())
+        assert (scalar.period, scalar.latency) == (fast.period, fast.latency)
+        assert _stage_sig(scalar) == _stage_sig(fast)
+
+
+def test_memory_constraint_is_enforced_or_relaxed():
+    model, cl = _MODELS[0], _cluster()
+    base = plan_with_spec(model.graph, cl, model.input_size)
+    budget = plan_metrics(base.pipeline).memory_bytes * 0.9
+    tight = plan_with_spec(model.graph, cl, model.input_size,
+                           PlanSpec(objective=ObjectiveSpec(
+                               max_memory_bytes=budget)))
+    assert tight.pipeline.feasible
+    assert plan_metrics(tight.pipeline).memory_bytes <= budget
+    # impossible budget: best-effort fallback, relaxed constraints
+    hopeless = plan_with_spec(model.graph, cl, model.input_size,
+                              PlanSpec(objective=ObjectiveSpec(
+                                  max_memory_bytes=1.0)))
+    assert hopeless.period > 0
+
+
+# ---------------------------------------------------------------------------
+# Pareto front (property-style over the zoo)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", _MODELS, ids=lambda m: m.name)
+def test_front_mutually_non_dominated_and_contains_optimum(model):
+    cl = _cluster()
+    front = plan_front(model, cl)
+    assert len(front) >= 2
+    for i, p in enumerate(front.points):
+        for j, q in enumerate(front.points):
+            if i != j:
+                assert not dominates(p.metrics, q.metrics)
+    # the front contains the single-objective optimum: a point at least
+    # as good as the pure-throughput plan on EVERY axis (the plan
+    # itself, or — when extra devices buy no throughput, e.g. a comm-
+    # bound model — one that strictly dominates it)
+    base = plan_with_spec(model.graph, cl, model.input_size)
+    bm = plan_metrics(base.pipeline)
+    opt = front.throughput_optimum
+    assert opt.period <= base.period
+    assert any(all(x <= y for x, y in zip(p.metrics.as_tuple(),
+                                          bm.as_tuple()))
+               for p in front.points)
+    # when the full-cluster plan itself survives the dominance filter,
+    # it is served bit-identically to the single-objective planner
+    survived = [p for p in front.points
+                if p.n_devices == len(cl) and p.t_lim == float("inf")]
+    for p in survived:
+        assert (p.period, p.latency) == (base.period, base.latency)
+        assert _stage_sig(p.plan) == _stage_sig(base)
+    assert front.points[0].period == opt.period   # best throughput first
+
+
+def test_front_select_honors_weights_and_constraints():
+    front = plan_front(_MODELS[0], _cluster())
+    energies = [p.energy_j for p in front]
+    mems = [p.memory_bytes for p in front]
+    # a pure single-metric objective picks that metric's minimum
+    assert front.select(ObjectiveSpec(throughput=0, energy=1.0)
+                        ).energy_j == min(energies)
+    assert front.select(ObjectiveSpec(throughput=0, memory=1.0)
+                        ).memory_bytes == min(mems)
+    assert front.select(None) is front.throughput_optimum
+    assert front.select("throughput") is front.throughput_optimum
+    # constraints filter; impossible ones raise a clear error
+    tight = front.select(ObjectiveSpec(max_energy_j=min(energies) * 1.0001))
+    assert tight.energy_j == min(energies)
+    with pytest.raises(ValueError, match="no front point"):
+        front.select(ObjectiveSpec(max_memory_bytes=1.0))
+    with pytest.raises(ValueError):
+        ParetoFront([]).select("battery")
+
+
+def test_front_artifact_round_trip_bit_identical():
+    front = plan_front(_MODELS[1], _cluster(),
+                       PlanSpec(objective=OBJECTIVE_PRESETS["balanced"]))
+    s = front.to_json()
+    back = ParetoFront.from_json(s)
+    assert back.to_json() == s               # bit-identical re-encode
+    assert len(back) == len(front)
+    assert back.spec == front.spec
+    for a, b in zip(front.points, back.points):
+        assert a.metrics == b.metrics
+        assert (a.n_devices, a.t_lim) == (b.n_devices, b.t_lim)
+        assert _stage_sig(a.plan) == _stage_sig(b.plan)
+    # newer-version artifacts are rejected, not misread
+    doc = json.loads(s)
+    doc["version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        ParetoFront.from_json(json.dumps(doc))
+
+
+def test_front_deployment_carries_objective_provenance(tmp_path):
+    from repro.api import DeploySpec, Deployment
+    model, cl = _MODELS[1], _cluster()
+    front = plan_front(model, cl)
+    dep = front.deployment(model, cl, deploy_spec=DeploySpec(
+        objective="battery"))
+    assert dep.pico.objective == "battery"
+    sel = front.select("battery")
+    assert (dep.pico.period, dep.pico.latency) == (sel.period, sel.latency)
+    # provenance survives the deployment artifact round-trip
+    path = tmp_path / "dep.json"
+    dep.save(path)
+    loaded = Deployment.load(path)
+    assert loaded.pico.objective == "battery"
+    with pytest.raises(ValueError):
+        DeploySpec(objective="speed")
+    # pre-objective plan payloads still load (field is additive)
+    from repro.api import artifacts
+    d = artifacts.plan_to_dict(dep.pico)
+    d.pop("objective")
+    assert artifacts.plan_from_dict(d).objective is None
+
+
+def test_plan_front_sweep_stays_on_hot_path():
+    """All candidates share one PlannerCache: the sweep reuses segment
+    geometry instead of recomputing it per configuration."""
+    cache = PlannerCache()
+    front = plan_front(_MODELS[1], _cluster(), planner_cache=cache)
+    assert len(front) >= 2
+    assert cache.hits > 0
+    assert len(cache.solutions) > 1          # one DP table per config
+
+
+# ---------------------------------------------------------------------------
+# registry-key separation per objective
+# ---------------------------------------------------------------------------
+
+def test_registry_keys_distinguish_objectives():
+    reg = PlanRegistry(metrics=MetricsRegistry())
+    model, cl = _MODELS[1], _cluster()
+    plain = reg.get_or_plan(model, cl, PlanSpec())
+    assert plain.source == "scratch"
+    # same model/cluster under an objective: a different key (miss),
+    # and the served plan carries the objective label
+    battery = reg.get_or_plan(
+        model, cl, PlanSpec(objective=OBJECTIVE_PRESETS["battery"]))
+    assert reg.misses == 2
+    assert battery.objective == "battery"
+    # both entries hit independently afterwards
+    assert reg.get_or_plan(model, cl, PlanSpec()).source == "registry"
+    assert reg.get_or_plan(
+        model, cl,
+        PlanSpec(objective=OBJECTIVE_PRESETS["battery"])).source == "registry"
+    assert reg.hits == 2
+    # a default-objective spec keys identically to the legacy spec
+    # payload (omitted-when-None): loading old registries stays exact
+    assert PlanSpec().to_json() == \
+        PlanSpec(objective=None).to_json()
