@@ -95,7 +95,7 @@ def main() -> None:
                    fig13_throughput, table5_hetero, fig15_memory,
                    table67_optimal, fig_runtime_adapt, fig_exec_backend,
                    fig_serving_mt, fig_kernel_conv, fig_fleet_planner,
-                   fig_pareto)
+                   fig_pareto, fig_dist_exec)
     benches = {
         "table4": lambda: table4_partition.run(),
         "fig5": lambda: fig5_redundancy.run(),
@@ -113,6 +113,7 @@ def main() -> None:
         "kernel": lambda: fig_kernel_conv.run(smoke=args.smoke or args.fast),
         "fleet": lambda: fig_fleet_planner.run(smoke=args.smoke or args.fast),
         "pareto": lambda: fig_pareto.run(smoke=args.smoke or args.fast),
+        "dist": lambda: fig_dist_exec.run(smoke=args.smoke or args.fast),
     }
     if args.smoke:
         # CI smoke: the exec-backend microbenchmark, the conv-kernel
@@ -126,6 +127,7 @@ def main() -> None:
             "serving": benches["serving"],
             "fleet": benches["fleet"],
             "pareto": benches["pareto"],
+            "dist": benches["dist"],
             "table4": benches["table4"],
             "fig5": benches["fig5"],
             # >= 2x DROP_AFTER frames so the churn event actually fires

@@ -23,6 +23,8 @@ _LAZY = {
     "ExecSpec": ("repro.api.specs", "ExecSpec"),
     "DeploySpec": ("repro.api.specs", "DeploySpec"),
     "FleetSpec": ("repro.api.specs", "FleetSpec"),
+    "DistSpec": ("repro.api.specs", "DistSpec"),
+    "DistLauncher": ("repro.dist.launcher", "DistLauncher"),
     "ObjectiveSpec": ("repro.api.specs", "ObjectiveSpec"),
     "OBJECTIVE_PRESETS": ("repro.api.specs", "OBJECTIVE_PRESETS"),
     "plan_front": ("repro.core.pareto", "plan_front"),
@@ -32,11 +34,12 @@ _LAZY = {
     "api": ("repro.api", None),
     "obs": ("repro.obs", None),
     "fleet": ("repro.fleet", None),
+    "dist": ("repro.dist", None),
 }
 
 __all__ = ["compile", "Deployment", "PlanSpec", "ExecSpec", "DeploySpec",
-           "FleetSpec", "ObjectiveSpec", "OBJECTIVE_PRESETS", "plan_front",
-           "ParetoFront", "PlanRegistry", "FleetRouter", "api", "obs",
-           "fleet"]
+           "FleetSpec", "DistSpec", "DistLauncher", "ObjectiveSpec",
+           "OBJECTIVE_PRESETS", "plan_front", "ParetoFront", "PlanRegistry",
+           "FleetRouter", "api", "obs", "fleet", "dist"]
 
 __getattr__, __dir__ = lazy_exports(__name__, globals(), _LAZY)

@@ -309,6 +309,22 @@ class Deployment:
             srv.params = self.params
         return srv
 
+    def fleet(self, dist_spec=None, **kw):
+        """Real distributed execution of this deployment
+        (:class:`~repro.dist.launcher.DistLauncher`): one worker per
+        pipeline stage — persistent threads or spawned processes per
+        :class:`~repro.api.specs.DistSpec` — each rebuilt from this
+        deployment's versioned JSON artifact (the artifact round-trip
+        is the hand-off).  ``launcher.run(frames)`` executes and
+        drains; ``repro.dist.validate(dep)`` pins the outputs
+        bit-identical to :meth:`run`.
+
+        Workers re-initialize weights deterministically from
+        ``DistSpec.seed`` (the artifact deliberately ships no weights),
+        so results match :meth:`run` under the same default params."""
+        from ..dist.launcher import DistLauncher
+        return DistLauncher(self, dist_spec, **kw)
+
     def scheduler(self, tenants: Sequence, config=None):
         """Multi-tenant scheduler co-hosting ``tenants``
         (:class:`~repro.serving.scheduler.TenantConfig`) on this

@@ -490,9 +490,87 @@ class FleetSpec(_SpecBase):
                              f"got {self.max_clusters}")
 
 
+_DIST_TRANSPORTS = ("memory", "tcp")
+_DIST_WORKERS = ("thread", "process")
+
+
+@dataclass(frozen=True)
+class DistSpec(_SpecBase):
+    """Real distributed execution configuration (:mod:`repro.dist`).
+
+    ``transport`` picks how stage tensors move between workers:
+    ``memory`` (queue pair carrying the encoded wire bytes — same codec
+    as TCP) or ``tcp`` (length-prefixed framed tensors over loopback/
+    LAN sockets, chunked sends).  ``workers`` picks the worker
+    substrate: ``thread`` (persistent threads in this process — the CI
+    mode) or ``process`` (one real OS process per pipeline stage via
+    the multiprocessing *spawn* context; requires ``transport="tcp"``
+    since spawned workers share no memory).  Either way each worker
+    receives its slice of the versioned Deployment JSON artifact — the
+    artifact round-trip is the hand-off; no pickled Python objects
+    cross the boundary.
+
+    ``heartbeat_s`` is the worker liveness beacon period; a worker
+    silent for ``peer_timeout_s`` is declared dead and surfaced as a
+    :class:`~repro.runtime.churn.DeviceLeave` churn event.
+    ``start_timeout_s`` bounds worker spawn + handshake + executable
+    warmup; ``recv_timeout_s`` bounds any single blocking receive
+    (drain progress) and ``shutdown_timeout_s`` the final drain before
+    in-flight frames are reported dropped.  ``micro_batch`` groups
+    frames per wire message through the ``lax.scan`` path;
+    ``max_inflight`` caps frames in the pipe (back-pressure);
+    ``chunk_bytes`` sizes transport send chunks (per-chunk byte/latency
+    accounting feeds ``repro.obs``).  ``seed`` seeds the deterministic
+    per-worker weight rebuild (workers re-init from the shipped graph,
+    bit-identical to the launcher's params).
+    """
+
+    transport: str = "memory"
+    workers: str = "thread"
+    heartbeat_s: float = 0.2
+    peer_timeout_s: float = 10.0
+    start_timeout_s: float = 120.0
+    recv_timeout_s: float = 30.0
+    shutdown_timeout_s: float = 30.0
+    micro_batch: int = 1
+    max_inflight: int = 8
+    chunk_bytes: int = 1 << 20
+    seed: int = 0
+    trace: bool = True          # merge worker spans into one Perfetto trace
+
+    def __post_init__(self):
+        if self.transport not in _DIST_TRANSPORTS:
+            raise ValueError(f"transport must be one of {_DIST_TRANSPORTS}, "
+                             f"got {self.transport!r}")
+        if self.workers not in _DIST_WORKERS:
+            raise ValueError(f"workers must be one of {_DIST_WORKERS}, "
+                             f"got {self.workers!r}")
+        if self.workers == "process" and self.transport != "tcp":
+            raise ValueError("workers='process' requires transport='tcp' "
+                             "(spawned workers share no memory)")
+        for name in ("heartbeat_s", "peer_timeout_s", "start_timeout_s",
+                     "recv_timeout_s", "shutdown_timeout_s"):
+            v = getattr(self, name)
+            if not (isinstance(v, (int, float)) and v > 0
+                    and math.isfinite(v)):
+                raise ValueError(f"{name} must be finite and > 0, got {v}")
+        if self.peer_timeout_s <= self.heartbeat_s:
+            raise ValueError(f"peer_timeout_s ({self.peer_timeout_s}) must "
+                             f"exceed heartbeat_s ({self.heartbeat_s})")
+        if self.micro_batch < 1:
+            raise ValueError(f"micro_batch must be >= 1, "
+                             f"got {self.micro_batch}")
+        if self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, "
+                             f"got {self.max_inflight}")
+        if self.chunk_bytes < 1024:
+            raise ValueError(f"chunk_bytes must be >= 1024, "
+                             f"got {self.chunk_bytes}")
+
+
 SPEC_KINDS = {cls.__name__: cls
               for cls in (ObjectiveSpec, PlanSpec, ExecSpec, DeploySpec,
-                          FleetSpec)}
+                          FleetSpec, DistSpec)}
 
 
 def spec_from_dict(d: dict):

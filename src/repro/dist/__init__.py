@@ -1,0 +1,40 @@
+"""``repro.dist`` — real multi-worker pipeline execution.
+
+PICO's premise is an offline-plan / online-execute split; this package
+is the online half made real.  A :class:`~repro.dist.launcher.
+DistLauncher` turns a shipped :class:`~repro.api.deployment.Deployment`
+artifact into a chain of persistent stage workers — threads locally,
+real OS processes via the multiprocessing *spawn* context — moving
+length-prefixed framed tensors over pluggable transports
+(:mod:`~repro.dist.transport`: in-memory queue pairs and TCP sockets,
+one shared codec).  Workers receive only the versioned JSON artifact
+(the round-trip is the hand-off; no pickled objects), rebuild
+model/plan/params deterministically, and run ``recv -> compiled
+StageExecutor -> send`` loops with heartbeats; dead peers surface as
+:class:`~repro.runtime.churn.DeviceLeave` churn events and every
+submitted frame ends either completed or dropped-with-reason.
+
+The simulator stays the oracle: :func:`~repro.dist.validate.validate`
+pins distributed outputs bit-identical to the single-process compiled
+path and sanity-checks observed-vs-modeled per-stage cost ratios.
+
+Entry points::
+
+    launcher = dep.fleet(repro.DistSpec())       # public entry point
+    report = launcher.run(frames)
+    from repro.dist import validate
+    assert validate(dep).ok
+"""
+
+from .launcher import DistLauncher, DistReport
+from .transport import (Message, MemoryTransport, TCPListener, TCPTransport,
+                        Transport, decode, encode, memory_pair)
+from .validate import DistValidation, make_frames, validate
+from .worker import StageWorker, worker_main
+
+__all__ = [
+    "DistLauncher", "DistReport", "DistValidation", "MemoryTransport",
+    "Message", "StageWorker", "TCPListener", "TCPTransport", "Transport",
+    "decode", "encode", "make_frames", "memory_pair", "validate",
+    "worker_main",
+]

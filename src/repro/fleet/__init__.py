@@ -7,7 +7,10 @@ models: planning must not be redone per cluster.  This package supplies
   finished :class:`~repro.core.planner.PicoPlan` artifacts keyed by
   ``(model fingerprint, cluster signature, PlanSpec, CostTable)``, so
   an identical cluster anywhere in the fleet gets its plan without
-  running the optimizer (DynO's serialized plan hand-off, fleet-wide);
+  running the optimizer (DynO's serialized plan hand-off, fleet-wide),
+  optionally backed by a :class:`~repro.fleet.store.PlanStore` — a
+  shared directory of versioned artifacts (atomic-rename writes) that
+  makes hits survive process boundaries;
 * :class:`~repro.fleet.router.FleetRouter` — admission/routing of
   tenants across cells driven by the same load-EWMA convention the
   serving scheduler uses, with device-churn handling that re-plans
@@ -25,8 +28,10 @@ Everything is configured by one frozen
 from .registry import PlanRegistry, cluster_signature, fingerprint_model
 from .router import Admission, Cell, FleetRouter, Tenant
 from .autoscale import Autoscaler, ScaleDecision
+from .store import PlanStore
 
 __all__ = [
     "Admission", "Autoscaler", "Cell", "FleetRouter", "PlanRegistry",
-    "ScaleDecision", "Tenant", "cluster_signature", "fingerprint_model",
+    "PlanStore", "ScaleDecision", "Tenant", "cluster_signature",
+    "fingerprint_model",
 ]

@@ -108,7 +108,7 @@ class PlanRegistry:
     (``artifacts.to_json("plan_registry", reg)``).
     """
 
-    def __init__(self, capacity: int = 256, metrics=None):
+    def __init__(self, capacity: int = 256, metrics=None, store=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
@@ -118,6 +118,10 @@ class PlanRegistry:
         self.misses = 0
         self._metrics = (metrics if metrics is not None
                          else obs_metrics.default_registry())
+        if store is not None and not hasattr(store, "get"):
+            from .store import PlanStore      # path-like -> file-backed
+            store = PlanStore(store)
+        self.store = store
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -148,6 +152,13 @@ class PlanRegistry:
                 "registry.lookup", model=key[0], cluster=key[1],
                 hit=key in self._entries):
             entry = self._entries.get(key)
+            if entry is None and self.store is not None:
+                entry = self.store.get(key)     # shared-store fallback
+                if entry is not None:
+                    self._entries[key] = entry
+                    while len(self._entries) > self.capacity:
+                        self._entries.popitem(last=False)
+                    self._metrics.counter("fleet.registry.store_hit").inc()
             if entry is None:
                 self.misses += 1
                 self._metrics.counter("fleet.registry.miss").inc()
@@ -166,16 +177,20 @@ class PlanRegistry:
             plan: PicoPlan, cost_table: CostTable | None = None) -> None:
         spec = spec or PlanSpec()
         key = self.key(model, cluster, spec, cost_table)
-        self._entries[key] = {
+        entry = {
             "model": key[0], "cluster_sig": key[1], "spec": spec.to_dict(),
             "cost_table_key": key[3],
             "device_names": [d.name for d in cluster.devices],
             "cluster": artifacts.cluster_to_dict(cluster),
             "plan": artifacts.plan_to_dict(plan),
         }
+        self._entries[key] = entry
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+        if self.store is not None:
+            # persist beyond the LRU horizon and this process's lifetime
+            self.store.put(key, entry)
         self._metrics.gauge("fleet.registry.size").set(len(self._entries))
 
     def get_or_plan(self, model, cluster: Cluster,

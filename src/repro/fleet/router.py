@@ -110,6 +110,36 @@ class FleetRouter:
         self._metrics.gauge("fleet.cell.load", cell=cell).set(c.load_ewma)
         return c.load_ewma
 
+    def observe_report(self, cell: str, report) -> float:
+        """Feed *real execution telemetry* into a cell's load-EWMA.
+
+        Accepts either online tier's end-of-run report and derives the
+        utilization sample the router's smoothing expects:
+
+        * a :class:`~repro.dist.launcher.DistReport` (or anything with
+          a ``utilization()`` method) — worker compute seconds over
+          worker wall capacity;
+        * a :class:`~repro.serving.scheduler.ServeReport` — summed
+          ``device_busy_s`` over ``len(devices) * makespan``.
+
+        This closes the plan/route/execute loop: the same artifact that
+        validates an execution also steers where the next tenant lands.
+        """
+        util = getattr(report, "utilization", None)
+        if callable(util):
+            sample = float(util())
+        elif (hasattr(report, "device_busy_s")
+              and hasattr(report, "makespan")):
+            busy = report.device_busy_s
+            span = report.makespan
+            sample = (sum(busy.values()) / (len(busy) * span)
+                      if busy and span > 0 else 0.0)
+        else:
+            raise TypeError(
+                f"observe_report wants a DistReport/ServeReport-like "
+                f"object, got {type(report).__name__}")
+        return self.observe(cell, min(1.0, max(0.0, sample)))
+
     def _demand_load(self, cell: Cell) -> float:
         """Static fallback load when no utilization was observed yet:
         admitted tenant weight per unit capacity, fleet-normalized.

@@ -54,6 +54,8 @@ SPAN_NAMES = (
     "registry.lookup",  # fleet plan-registry probe (hit or miss)
     "fleet.route",      # tenant admission / routing decision
     "fleet.autoscale",  # autoscaler watermark evaluation
+    "dist.launch",      # dist worker spawn + handshake + warmup probe
+    "dist.churn",       # dist worker declared dead (heartbeat/link/error)
 )
 
 #: Default track for host-side (wall-clock) spans.

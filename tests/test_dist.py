@@ -1,0 +1,315 @@
+"""repro.dist: wire codec, transports, the launcher's loss accounting,
+churn drill, and oracle validation (distributed == single-process,
+bit-for-bit)."""
+
+import json
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api.specs import DistSpec
+from repro.core import make_pi_cluster
+from repro.dist import (Message, TCPListener, TCPTransport, decode, encode,
+                        make_frames, memory_pair, validate)
+from repro.dist.validate import reference_outputs
+from repro.fleet import FleetRouter
+from repro.api import FleetSpec
+from repro.models.cnn import zoo
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime.churn import DeviceLeave
+
+
+def _cluster():
+    return make_pi_cluster([1.5, 1.2, 1.0], bandwidth_mbps=50.0)
+
+
+@pytest.fixture(scope="module")
+def sq_dep():
+    model = zoo.squeezenet(input_size=(64, 64), scale=0.1)
+    return repro.compile(model, _cluster())
+
+
+# ---------------------------------------------------------------------------
+# DistSpec
+# ---------------------------------------------------------------------------
+
+def test_dist_spec_json_round_trip():
+    spec = DistSpec(transport="tcp", workers="process", heartbeat_s=0.1,
+                    micro_batch=3, chunk_bytes=4096, seed=7, trace=False)
+    assert DistSpec.from_json(spec.to_json()) == spec
+    # Deployment-style nested payload decode
+    assert DistSpec.from_dict(json.loads(spec.to_json())) == spec
+
+
+def test_dist_spec_validation():
+    with pytest.raises(ValueError):
+        DistSpec(transport="carrier-pigeon")
+    with pytest.raises(ValueError):
+        DistSpec(workers="fiber")
+    with pytest.raises(ValueError):            # spawn shares no memory
+        DistSpec(workers="process", transport="memory")
+    with pytest.raises(ValueError):
+        DistSpec(heartbeat_s=0.0)
+    with pytest.raises(ValueError):            # timeout must exceed beacon
+        DistSpec(heartbeat_s=1.0, peer_timeout_s=0.5)
+    with pytest.raises(ValueError):
+        DistSpec(micro_batch=0)
+    with pytest.raises(ValueError):
+        DistSpec(chunk_bytes=16)
+
+
+# ---------------------------------------------------------------------------
+# wire codec (satellite: zero-length tensors, large framed payloads)
+# ---------------------------------------------------------------------------
+
+def _round_trip(msg):
+    wire = encode(msg)               # u64 length prefix | framed body
+    (n,) = struct.unpack_from("<Q", wire)
+    assert n == len(wire) - 8
+    return decode(wire[8:])
+
+
+def test_codec_round_trip_exact():
+    msg = Message("frame", [3, 4],
+                  {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+                   "b": np.array([[True, False]]),
+                   "__image__": np.zeros((1, 2, 2, 3), np.float32)},
+                  {"warmup": False, "note": "x"})
+    got = _round_trip(msg)
+    assert got.kind == "frame" and got.fids == [3, 4]
+    assert got.meta == msg.meta
+    for k, v in msg.tensors.items():
+        assert got.tensors[k].dtype == v.dtype
+        assert np.array_equal(got.tensors[k], v)
+
+
+def test_codec_zero_length_tensor():
+    msg = Message("result", [0], {"empty": np.zeros((0, 5), np.float32),
+                                  "scalar": np.float32(2.5).reshape(())})
+    got = _round_trip(msg)
+    assert got.tensors["empty"].shape == (0, 5)
+    assert got.tensors["scalar"].shape == ()
+    assert float(got.tensors["scalar"]) == 2.5
+
+
+def test_codec_no_tensors():
+    got = _round_trip(Message("heartbeat", meta={"worker": "w0"}))
+    assert got.kind == "heartbeat" and got.tensors == {}
+
+
+def test_codec_rejects_garbage():
+    with pytest.raises(ValueError):
+        decode(b"\x00" * 32)
+
+
+def test_memory_transport_carries_encoded_bytes():
+    s, r = memory_pair("t", chunk_bytes=64, metrics=MetricsRegistry())
+    payload = np.arange(1000, dtype=np.float32)
+    s.send(Message("frame", [1], {"x": payload}))
+    got = r.recv(timeout=1.0)
+    assert np.array_equal(got.tensors["x"], payload)
+    assert s.bytes_sent == r.bytes_recv > payload.nbytes
+    assert s.sends == 1 and r.recvs == 1
+    assert r.recv(timeout=0.05) is None        # timeout -> None, not error
+    s.close()
+    with pytest.raises(ConnectionError):       # peer closed -> recv raises
+        r.recv(timeout=1.0)
+
+
+def test_tcp_transport_large_chunked_payload():
+    """>64 MB framed tensor moves intact through chunked TCP sends."""
+    big = np.random.default_rng(0).integers(
+        0, 255, size=(17, 1024, 1024), dtype=np.uint8)   # 17 MB * 4 shapes
+    big = np.stack([big] * 4)                            # 68 MB
+    assert big.nbytes > (1 << 26)
+    lst = TCPListener()
+    out = {}
+
+    def rx():
+        r = lst.accept(link="big", chunk_bytes=1 << 20, timeout=30.0)
+        out["msg"] = r.recv(timeout=60.0)
+        r.close()
+
+    t = threading.Thread(target=rx, daemon=True)
+    t.start()
+    s = TCPTransport.connect(lst.addr, link="big", chunk_bytes=1 << 20,
+                             timeout=30.0)
+    s.send(Message("frame", [0], {"big": big}))
+    t.join(timeout=120.0)
+    s.close()
+    lst.close()
+    got = out["msg"].tensors["big"]
+    assert got.dtype == np.uint8 and np.array_equal(got, big)
+
+
+def test_tcp_recv_timeout_preserves_framing():
+    """A timed-out recv must not corrupt the stream: the same frame is
+    still delivered whole by the next call."""
+    lst = TCPListener()
+    conn = {}
+    t = threading.Thread(
+        target=lambda: conn.setdefault(
+            "r", lst.accept(link="x", timeout=10.0)),
+        daemon=True)
+    t.start()
+    s = TCPTransport.connect(lst.addr, link="x", timeout=10.0)
+    t.join(timeout=10.0)
+    r = conn["r"]
+    assert r.recv(timeout=0.05) is None        # nothing sent yet
+    s.send(Message("frame", [9], {"v": np.ones(4, np.float32)}))
+    got = r.recv(timeout=5.0)
+    assert got.fids == [9] and np.array_equal(got.tensors["v"],
+                                              np.ones(4, np.float32))
+    s.close()
+    r.close()
+    lst.close()
+
+
+# ---------------------------------------------------------------------------
+# launcher: oracle validation across zoo models / transports
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,scale", [
+    ("squeezenet", 0.1), ("mobilenetv3", 0.25), ("resnet34", 0.1)])
+def test_validate_zoo_models_bit_identical(name, scale):
+    model = zoo.build(name, input_size=(64, 64), scale=scale)
+    dep = repro.compile(model, _cluster())
+    v = validate(dep, DistSpec(), frames=4)
+    assert v.ok, v.describe()
+    assert v.bit_identical and v.max_abs_diff == 0.0
+    assert v.dropped == 0
+    assert v.ratios and all(r > 0 for r in v.ratios.values())
+
+
+def test_validate_tcp_micro_batch(sq_dep):
+    v = validate(sq_dep, DistSpec(transport="tcp", micro_batch=2), frames=4)
+    assert v.ok, v.describe()
+
+
+def test_tcp_and_memory_byte_identical():
+    """Same frames through both transports on two zoo models: outputs
+    byte-identical (one shared wire codec, one compiled path)."""
+    for name, scale in (("squeezenet", 0.1), ("mobilenetv3", 0.25)):
+        model = zoo.build(name, input_size=(64, 64), scale=scale)
+        dep = repro.compile(model, _cluster())
+        xs = make_frames(model, 3)
+        mem = dep.fleet(DistSpec(transport="memory")).run(xs)
+        tcp = dep.fleet(DistSpec(transport="tcp")).run(xs)
+        assert not mem.dropped and not tcp.dropped
+        for fid in range(len(xs)):
+            for sink, arr in mem.outputs[fid].items():
+                assert arr.tobytes() == tcp.outputs[fid][sink].tobytes()
+
+
+def test_report_accounting_and_telemetry(sq_dep):
+    metrics = MetricsRegistry()
+    launcher = sq_dep.fleet(DistSpec(), metrics=metrics)
+    rep = launcher.run(make_frames(sq_dep.model, 4))
+    assert rep.submitted == 4 and rep.completed == 4 and not rep.dropped
+    assert rep.n_stages == len(sq_dep.pico.pipeline.stages)
+    # per-worker stats made it back over the control links
+    assert set(rep.worker_stats) == {f"w{i}" for i in range(rep.n_stages)}
+    for st in rep.worker_stats.values():
+        assert st["frames"] == 4 and st["compute_s"] > 0
+        assert st["dead"] is None
+    assert 0.0 < rep.utilization() <= 1.0
+    # link byte/latency accounting reached the metrics registry
+    snap = metrics.snapshot()["payload"]
+    assert any(c["name"] == "dist.link.bytes_sent"
+               for c in snap["counters"])
+    # ...and the report feeds the fleet's load-EWMA directly
+    router = FleetRouter({"cell": _cluster()}, spec=FleetSpec(),
+                         metrics=MetricsRegistry())
+    assert router.observe_report("cell", rep) == pytest.approx(
+        rep.utilization())
+
+
+# ---------------------------------------------------------------------------
+# shutdown: zero silent loss
+# ---------------------------------------------------------------------------
+
+def test_clean_shutdown_drains_all_inflight(sq_dep):
+    """Frames submitted but not yet collected all complete during the
+    drain — the stop rides behind them on FIFO links."""
+    launcher = sq_dep.fleet(DistSpec(max_inflight=16))
+    launcher.start()
+    xs = make_frames(sq_dep.model, 5)
+    for f in xs:
+        launcher.submit(f)
+    rep = launcher.shutdown()          # immediate: everything in flight
+    assert rep.submitted == 5
+    assert rep.completed == 5 and not rep.dropped
+    assert rep.completed + len(rep.dropped) == rep.submitted
+    ref = reference_outputs(sq_dep, xs)
+    for fid, want in enumerate(ref):
+        for sink, arr in want.items():
+            assert np.array_equal(rep.outputs[fid][sink], arr)
+    assert launcher.shutdown() is rep  # idempotent
+
+
+def test_shutdown_abort_drops_with_reason(sq_dep):
+    launcher = sq_dep.fleet(DistSpec(max_inflight=16))
+    launcher.start()
+    for f in make_frames(sq_dep.model, 3):
+        launcher.submit(f)
+    rep = launcher.shutdown(abort=True)
+    assert rep.completed + len(rep.dropped) == rep.submitted == 3
+    for _, reason in rep.dropped:
+        assert "abort" in reason
+
+
+# ---------------------------------------------------------------------------
+# churn drill: killed worker -> DeviceLeave + drops + recovery
+# ---------------------------------------------------------------------------
+
+def test_killed_worker_churn_and_recovery(sq_dep):
+    """A silently-killed worker surfaces as DeviceLeave churn, strands
+    its in-flight frames as dropped-with-reason, and a re-plan on the
+    survivors recovers every frame bit-identically."""
+    cluster = _cluster()
+    spec = DistSpec(heartbeat_s=0.05, peer_timeout_s=0.6)
+    xs = make_frames(sq_dep.model, 6)
+    ref = reference_outputs(sq_dep, xs)
+
+    launcher = sq_dep.fleet(spec)
+    launcher.start()
+    victim = min(1, len(launcher.workers) - 1)
+    launcher.kill_worker(victim)
+    rep = launcher.run(xs)
+
+    assert rep.churn_events, "dead worker must surface churn events"
+    assert all(isinstance(e, DeviceLeave) for e in rep.churn_events)
+    dead_devices = {e.device_name for e in rep.churn_events}
+    assert dead_devices == set(launcher.workers[victim].devices)
+    assert rep.completed + len(rep.dropped) == rep.submitted
+    assert rep.dropped, "frames stranded behind the dead stage must drop"
+    for _, reason in rep.dropped:
+        assert "dead" in reason or "heartbeat" in reason
+
+    # drain-and-repartition: re-plan on the survivors, resubmit the gap
+    alive = [d for d in cluster.devices if d.name not in dead_devices]
+    dep2 = sq_dep.replan(cluster.restricted(alive))
+    missing = sorted(set(range(len(xs))) - set(rep.outputs))
+    rep2 = dep2.fleet(spec).run([xs[i] for i in missing])
+    assert not rep2.dropped and rep2.completed == len(missing)
+    merged = dict(rep.outputs)
+    for k, fid in enumerate(missing):
+        merged[fid] = rep2.outputs[k]
+    for fid, want in enumerate(ref):
+        for sink, arr in want.items():
+            assert np.array_equal(merged[fid][sink], arr)
+
+
+def test_worker_spans_merge_into_launcher_trace(sq_dep):
+    from repro.obs.trace import Tracer
+    tracer = Tracer()
+    launcher = sq_dep.fleet(DistSpec(), tracer=tracer)
+    launcher.run(make_frames(sq_dep.model, 2))
+    tracks = {s.track for s in tracer.spans}
+    names = {s.name for s in tracer.spans}
+    assert "dist:launcher" in tracks
+    assert {f"dist:w{i}" for i in range(len(launcher.workers))} <= tracks
+    assert "dist.launch" in names and "stage.compute" in names

@@ -403,3 +403,127 @@ def test_fleet_spec_validation_and_round_trip():
                 dict(min_clusters=0), dict(min_clusters=3, max_clusters=2)):
         with pytest.raises(ValueError):
             FleetSpec(**bad)
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: file-backed shared registry
+# ---------------------------------------------------------------------------
+
+def test_registry_file_store_shared_across_instances(tmp_path):
+    """A plan persisted by one registry instance is a hit for a fresh
+    instance pointed at the same directory — cross-process sharing with
+    no coordination, and the served plan is exact."""
+    from repro.fleet import PlanStore
+    model, c = _MODELS[0], _cluster4()
+    root = tmp_path / "store"
+    r1 = PlanRegistry(store=root, metrics=MetricsRegistry())
+    p1 = r1.get_or_plan(model, c)
+    assert p1.source == "scratch" and len(r1.store) == 1
+    r2 = PlanRegistry(store=PlanStore(root), metrics=MetricsRegistry())
+    p2 = r2.get_or_plan(model, c)
+    assert p2.source == "registry"
+    assert r2.hits == 1 and r2.misses == 0
+    assert _sig(p1) == _sig(p2)
+    # a different content key stays a miss even with the store attached
+    assert r2.get(model, c, PlanSpec(t_lim=0.123)) is None
+
+
+def test_registry_store_survives_lru_eviction(tmp_path):
+    """The store outlives the in-memory LRU horizon: an evicted entry
+    is re-served from disk, not re-planned."""
+    model = _MODELS[0]
+    c1, c2, c3 = (make_pi_cluster([1.0] * n) for n in (2, 3, 4))
+    reg = PlanRegistry(capacity=2, store=tmp_path, metrics=MetricsRegistry())
+    for c in (c1, c2, c3):                     # c1 evicted from memory
+        reg.get_or_plan(model, c)
+    assert len(reg) == 2 and len(reg.store) == 3
+    hit = reg.get_or_plan(model, c1)
+    assert hit.source == "registry"
+
+
+def test_plan_store_tolerates_corrupt_files(tmp_path):
+    """Corrupt/foreign files in a shared directory read as misses —
+    one bad writer must not poison every consumer."""
+    from repro.fleet import PlanStore
+    model, c = _MODELS[0], _cluster4()
+    r1 = PlanRegistry(store=tmp_path, metrics=MetricsRegistry())
+    r1.get_or_plan(model, c)
+    for p in tmp_path.glob("*.json"):
+        p.write_text("{ not json")
+    (tmp_path / "foreign.json").write_text("{}")
+    r2 = PlanRegistry(store=tmp_path, metrics=MetricsRegistry())
+    assert r2.get(model, c) is None            # miss, never an error
+    p2 = r2.get_or_plan(model, c)              # re-plans, re-publishes
+    assert p2.source == "scratch"
+    assert PlanStore(tmp_path).get(r2.key(model, c, PlanSpec())) is not None
+    assert PlanStore(tmp_path).keys() == [r2.key(model, c, PlanSpec())]
+
+
+def test_plan_store_atomic_publish_and_delete(tmp_path):
+    from repro.fleet import PlanStore
+    store = PlanStore(tmp_path)
+    key = ("m", "c", "{}", "")
+    store.put(key, {"plan": 1})
+    assert key in store and store.get(key) == {"plan": 1}
+    assert not list(tmp_path.glob("*.tmp"))    # temp files never linger
+    store.put(key, {"plan": 2})                # overwrite is atomic too
+    assert store.get(key) == {"plan": 2}
+    assert store.delete(key) and key not in store
+    assert not store.delete(key)
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter.observe_report: real telemetry -> load-EWMA
+# ---------------------------------------------------------------------------
+
+def test_router_observe_report_serve_and_dist_shapes():
+    r = _router()
+
+    class FakeServe:                            # ServeReport-shaped
+        device_busy_s = {"d0": 2.0, "d1": 1.0}
+        makespan = 2.0
+
+    class FakeDist:                             # DistReport-shaped
+        def utilization(self):
+            return 0.4
+
+    first = r.observe_report("a", FakeServe())
+    assert first == pytest.approx(0.75)         # 3.0 / (2 * 2.0)
+    beta = r.spec.ewma_beta
+    second = r.observe_report("a", FakeDist())
+    assert second == pytest.approx(beta * 0.4 + (1 - beta) * 0.75)
+    assert r.cell_load("a") == pytest.approx(second)
+
+    class Saturated:
+        def utilization(self):
+            return 7.3                          # clamped before smoothing
+
+    r2 = _router()
+    assert r2.observe_report("b", Saturated()) == 1.0
+
+    class Idle:                                 # zero makespan -> zero load
+        device_busy_s = {}
+        makespan = 0.0
+
+    assert r2.observe_report("a", Idle()) == 0.0
+    with pytest.raises(TypeError):
+        r.observe_report("a", object())
+
+
+def test_router_observe_report_steers_routing():
+    """Telemetry-driven regression: the cell whose reports show load
+    stops winning least_loaded placement."""
+    r = _router()
+
+    class Busy:
+        def utilization(self):
+            return 0.95
+
+    class Quiet:
+        def utilization(self):
+            return 0.05
+
+    for _ in range(5):
+        r.observe_report("a", Busy())
+        r.observe_report("b", Quiet())
+    assert r.admit(Tenant("t0", _MODELS[0])).cell == "b"
